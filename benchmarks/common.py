@@ -1,0 +1,77 @@
+"""Shared helpers for the per-figure benchmarks.
+
+Every bench module exposes ``rows(quick: bool) -> list[(name, us_per_call,
+derived)]``; run.py prints them as CSV. ``us_per_call`` is the measured
+wall-time of the operation the figure studies (plan generation, interval
+processing); ``derived`` carries the figure's headline metric.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+import numpy as np
+
+from repro.core import Assignment, BalanceConfig, ModHash, RebalanceController
+from repro.core.balancer import KeyStats
+from repro.streams import KeyedStage, WordCount, WindowedSelfJoin, WorkloadGen
+
+Row = Tuple[str, float, str]
+
+
+def timed(fn: Callable, *args, repeats: int = 3, **kw):
+    best = float("inf")
+    out = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        best = min(best, time.perf_counter() - t0)
+    return out, best * 1e6  # us
+
+
+def workload(k=10_000, z=0.85, f=1.0, n_dest=15, seed=0, window=1,
+             warm_table=True, algorithm="mixed", theta_max=0.08,
+             table_max=3_000):
+    """Paper Table II defaults: returns (stats, assignment, config) after one
+    warm rebalance so the routing table is non-trivial."""
+    gen = WorkloadGen(k=k, z=z, f=f, seed=seed, window=window)
+    assignment = Assignment(ModHash(n_dest, seed=seed))
+    cfg = BalanceConfig(theta_max=theta_max, table_max=table_max,
+                        window=window)
+    stats = gen.interval(assignment, fluctuate=False)
+    if warm_table:
+        from repro.core.balancer import mixed
+        assignment = mixed(stats, assignment, cfg).assignment
+        stats = gen.interval(assignment)            # one fluctuation step
+    return gen, stats, assignment, cfg
+
+
+def stage_throughput(operator, algorithm, theta_max, gen_kwargs,
+                     intervals=5, tuples_per_interval=20_000, table_max=3000,
+                     window=2, n_tasks=10, seed=0):
+    """Drive the stream engine; return (mean throughput, mean latency proxy,
+    mean skewness) over the steady-state intervals."""
+    gen = WorkloadGen(seed=seed, window=window, **gen_kwargs)
+    controller = RebalanceController(
+        Assignment(ModHash(n_tasks, seed=seed)),
+        BalanceConfig(theta_max=theta_max, table_max=table_max,
+                      window=window),
+        algorithm=algorithm)
+    stage = KeyedStage(operator, controller, window=window)
+    for i in range(intervals):
+        if i > 0:
+            gen.interval(stage.controller.assignment)
+        keys = gen.draw_tuples(tuples_per_interval)
+        stage.process_interval([(int(kk), i) for kk in keys])
+    reps = stage.reports[1:]
+    thr = float(np.mean([r.throughput for r in reps]))
+    lat = float(np.mean([r.makespan + r.migration_stall for r in reps]))
+    skew = float(np.mean([r.skewness for r in reps]))
+    return thr, lat, skew
+
+
+def ideal_throughput(gen_kwargs, intervals=5, tuples_per_interval=20_000,
+                     n_tasks=10, seed=0):
+    """The paper's 'Ideal' line: key-oblivious shuffle (perfect balance)."""
+    return tuples_per_interval / (tuples_per_interval / n_tasks)

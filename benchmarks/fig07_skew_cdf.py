@@ -1,0 +1,31 @@
+"""Fig. 7: workload skewness of the pure hash scheme vs N_D and K."""
+
+import numpy as np
+
+from repro.core import Assignment, ModHash
+from repro.core.balancer import metrics
+from repro.streams import WorkloadGen
+
+from .common import Row, timed
+
+
+def rows(quick=True):
+    out = []
+    intervals = 10 if quick else 50
+    for n_dest in (5, 10, 20, 40):
+        gen = WorkloadGen(k=10_000, z=0.85, f=0.5, seed=0)
+        a = Assignment(ModHash(n_dest))
+        skews = []
+        def run():
+            s = gen.interval(a)
+            skews.append(metrics.skewness(metrics.loads(s, a)))
+        _, us = timed(lambda: [run() for _ in range(intervals)], repeats=1)
+        out.append((f"fig07/hash_skew_nd{n_dest}", us / intervals,
+                    f"max_skew={max(skews):.2f};p50={np.median(skews):.2f}"))
+    for k in (5_000, 10_000, 100_000, 1_000_000):
+        gen = WorkloadGen(k=k, z=0.85, f=0.0, seed=1)
+        a = Assignment(ModHash(15))
+        s = gen.interval(a, fluctuate=False)
+        sk = metrics.skewness(metrics.loads(s, a))
+        out.append((f"fig07/hash_skew_k{k}", 0.0, f"skew={sk:.2f}"))
+    return out

@@ -1,0 +1,21 @@
+"""Fig. 8: plan-generation time + migration cost vs number of instances."""
+
+from repro.core.balancer import metrics, mintable, mixed
+
+from .common import Row, timed, workload
+
+
+def rows(quick=True):
+    out = []
+    nds = (5, 10, 15, 20, 30, 40) if not quick else (5, 15, 40)
+    for w in (1, 5):
+        for nd in nds:
+            _, stats, a, cfg = workload(n_dest=nd, window=w,
+                                        k=5_000 if quick else 10_000)
+            total_mem = stats.mem.sum()
+            for name, algo in (("mixed", mixed), ("mintable", mintable)):
+                res, us = timed(algo, stats, a, cfg)
+                out.append((f"fig08/{name}_nd{nd}_w{w}", us,
+                            f"mig_frac={res.migration_cost/total_mem:.4f};"
+                            f"theta={res.theta:.3f}"))
+    return out

@@ -1,0 +1,23 @@
+"""Fig. 9: plan time + migration cost vs theta_max."""
+
+import dataclasses
+
+from repro.core.balancer import mintable, mixed
+
+from .common import timed, workload
+
+
+def rows(quick=True):
+    out = []
+    thetas = (0.02, 0.08, 0.2, 0.5) if quick else (0.02, 0.05, 0.08, 0.1,
+                                                   0.2, 0.3, 0.5, 1.0)
+    for w in (1, 5):
+        for th in thetas:
+            _, stats, a, cfg = workload(window=w, theta_max=th,
+                                        k=5_000 if quick else 10_000)
+            total = stats.mem.sum()
+            for name, algo in (("mixed", mixed), ("mintable", mintable)):
+                res, us = timed(algo, stats, a, cfg)
+                out.append((f"fig09/{name}_theta{th}_w{w}", us,
+                            f"mig_frac={res.migration_cost/total:.4f}"))
+    return out

@@ -1,0 +1,20 @@
+"""Fig. 10: plan time + migration cost vs key-domain size K."""
+
+from repro.core.balancer import mintable, mixed
+
+from .common import timed, workload
+
+
+def rows(quick=True):
+    out = []
+    ks = (5_000, 10_000, 100_000) if quick else (5_000, 10_000, 100_000,
+                                                 1_000_000)
+    for k in ks:
+        for w in (1, 5):
+            _, stats, a, cfg = workload(k=k, window=w)
+            total = stats.mem.sum()
+            for name, algo in (("mixed", mixed), ("mintable", mintable)):
+                res, us = timed(algo, stats, a, cfg, repeats=1)
+                out.append((f"fig10/{name}_k{k}_w{w}", us,
+                            f"mig_frac={res.migration_cost/total:.4f}"))
+    return out

@@ -1,0 +1,23 @@
+"""Fig. 11: compact-representation degree R: plan time + load-estimate error."""
+
+from repro.core.balancer import compact_mixed, mixed
+
+from .common import timed, workload
+
+
+def rows(quick=True):
+    out = []
+    # theta_max=0: the paper's saturation setting ('requirement of absolute
+    # load balancing') — the regime where plan cost is dominated by per-key
+    # churn and the compact representation pays off by orders of magnitude.
+    k = 8_000 if quick else 50_000
+    _, stats, a, cfg = workload(k=k, theta_max=0.0, table_max=k)
+    res, us = timed(mixed, stats, a, cfg, repeats=1)
+    out.append((f"fig11/original_key_space_k{k}", us,
+                f"theta={res.theta:.4f}"))
+    for r in (0, 1, 2, 3, 5, 8):
+        res, us = timed(compact_mixed, stats, a, cfg, r, repeats=1)
+        out.append((f"fig11/compact_r{r}_k{k}", us,
+                    f"est_err={res.meta['load_est_err']:.4f};"
+                    f"groups={res.meta['groups']:.0f};theta={res.theta:.4f}"))
+    return out

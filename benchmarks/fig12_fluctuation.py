@@ -1,0 +1,23 @@
+"""Fig. 12: plan time + migration cost vs fluctuation rate f
+(Mixed vs Mixed_BF vs Readj)."""
+
+from repro.core.balancer import mixed, mixed_bf, readj_best_sigma
+
+from .common import timed, workload
+
+
+def rows(quick=True):
+    out = []
+    fs = (0.2, 1.0, 2.0) if quick else (0.0, 0.2, 0.5, 1.0, 1.5, 2.0)
+    k = 2_000 if quick else 10_000
+    for f in fs:
+        _, stats, a, cfg = workload(k=k, f=f, theta_max=0.08)
+        total = stats.mem.sum()
+        algos = [("mixed", mixed), ("mixed_bf", mixed_bf),
+                 ("readj", readj_best_sigma)]
+        for name, algo in algos:
+            res, us = timed(algo, stats, a, cfg, repeats=1)
+            out.append((f"fig12/{name}_f{f}", us,
+                        f"mig_frac={res.migration_cost/total:.4f};"
+                        f"theta={res.theta:.3f}"))
+    return out

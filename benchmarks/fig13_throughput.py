@@ -1,0 +1,23 @@
+"""Fig. 13: throughput + latency vs fluctuation rate (Mixed vs Readj vs
+hash-only vs Ideal) on the stream engine's performance model."""
+
+from repro.streams import WordCount
+
+from .common import stage_throughput
+
+
+def rows(quick=True):
+    out = []
+    fs = (0.2, 1.0) if quick else (0.0, 0.5, 1.0, 1.5, 2.0)
+    n = 8_000 if quick else 40_000
+    for f in fs:
+        gk = dict(k=3_000, z=0.9, f=f)
+        for name, algo, th in (("mixed", "mixed", 0.08),
+                               ("readj", "readj", 0.08),
+                               ("hash", "mixed", 1e9)):
+            thr, lat, skew = stage_throughput(WordCount(), algo, th, gk,
+                                              tuples_per_interval=n)
+            out.append((f"fig13/{name}_f{f}", lat * 1e6 / n,
+                        f"throughput={thr:.2f};skew={skew:.2f}"))
+        out.append((f"fig13/ideal_f{f}", 0.0, "throughput=10.00;skew=1.00"))
+    return out

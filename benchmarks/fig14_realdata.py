@@ -1,0 +1,43 @@
+"""Fig. 14: throughput vs theta_max on the two real-workload analogues:
+word count ('Social') and windowed self-join ('Stock'); PKG included for the
+aggregation topology (it cannot run the join, as in the paper)."""
+
+import numpy as np
+
+from repro.core.balancer import pkg_route
+from repro.streams import WindowedSelfJoin, WordCount, WorkloadGen
+
+from .common import stage_throughput
+
+
+def rows(quick=True):
+    out = []
+    thetas = (0.02, 0.1, 0.3) if quick else (0.02, 0.05, 0.1, 0.15, 0.2, 0.3)
+    n = 8_000 if quick else 40_000
+    social = dict(k=3_000, z=0.8, f=0.5)     # slow-moving word frequencies
+    stock = dict(k=400, z=1.0, f=1.5)        # bursty keys
+    for th in thetas:
+        thr, _, skew = stage_throughput(WordCount(), "mixed", th, social,
+                                        tuples_per_interval=n)
+        out.append((f"fig14/social_mixed_th{th}", 0.0,
+                    f"throughput={thr:.2f};skew={skew:.2f}"))
+        thr, _, skew = stage_throughput(WindowedSelfJoin(), "mixed", th,
+                                        stock, tuples_per_interval=n // 4)
+        out.append((f"fig14/stock_mixed_th{th}", 0.0,
+                    f"throughput={thr:.2f};skew={skew:.2f}"))
+        thr, _, skew = stage_throughput(WordCount(), "readj", th, social,
+                                        tuples_per_interval=n)
+        out.append((f"fig14/social_readj_th{th}", 0.0,
+                    f"throughput={thr:.2f};skew={skew:.2f}"))
+    # PKG: split-key two-choices + merge cost; theta-insensitive
+    gen = WorkloadGen(seed=0, **social)
+    from repro.core import Assignment, ModHash
+    stats = gen.interval(Assignment(ModHash(10)), fluctuate=False)
+    reps = np.repeat(stats.keys, 4)
+    w = np.repeat(stats.cost / 4, 4)
+    res = pkg_route(reps[:n], w[:n], 10)
+    makespan = res.loads.max() + res.merge_cost / 10
+    out.append(("fig14/social_pkg", 0.0,
+                f"throughput={n/makespan:.2f};"
+                f"split_keys={res.split_keys}"))
+    return out

@@ -1,0 +1,33 @@
+"""Fig. 15: elastic scale-out — rebalance response time and recovery."""
+
+import numpy as np
+
+from repro.core import Assignment, BalanceConfig, ModHash, RebalanceController
+from repro.streams import KeyedStage, WordCount, WorkloadGen
+
+from .common import timed
+
+
+def rows(quick=True):
+    out = []
+    n = 8_000 if quick else 40_000
+    for algo in ("mixed", "readj"):
+        gen = WorkloadGen(k=3_000, z=0.9, f=0.3, seed=0, window=2)
+        controller = RebalanceController(
+            Assignment(ModHash(9, seed=0)),
+            BalanceConfig(theta_max=0.1, table_max=3_000, window=2),
+            algorithm=algo)
+        stage = KeyedStage(WordCount(), controller, window=2)
+        for i in range(3):
+            if i:
+                gen.interval(stage.controller.assignment)
+            stage.process_interval(
+                [(int(k), i) for k in gen.draw_tuples(n)])
+        _, us = timed(stage.scale_to, 10, repeats=1)
+        gen.interval(stage.controller.assignment)
+        rep = stage.process_interval(
+            [(int(k), 9) for k in gen.draw_tuples(n)])
+        out.append((f"fig15/scaleout_{algo}", us,
+                    f"skew_after={rep.skewness:.2f};"
+                    f"new_worker_share={rep.task_loads[9]/rep.task_loads.mean():.2f}"))
+    return out

@@ -1,0 +1,37 @@
+"""Fig. 16: TPC-H Q5-like continuous query — a two-stage keyed topology
+(join keyed by customer/order keys with zipf-skewed foreign keys), with a
+distribution change every few intervals. Mixed vs hash-only ('Storm')."""
+
+import numpy as np
+
+from repro.core import Assignment, BalanceConfig, ModHash, RebalanceController
+from repro.streams import KeyedStage, WindowedSelfJoin, WorkloadGen
+
+
+def _run(algorithm, theta_max, quick):
+    n = 4_000 if quick else 20_000
+    gen = WorkloadGen(k=800, z=0.8, f=1.0, seed=3, window=3)
+    controller = RebalanceController(
+        Assignment(ModHash(12, seed=1)),
+        BalanceConfig(theta_max=theta_max, table_max=2_000, window=3),
+        algorithm=algorithm)
+    stage = KeyedStage(WindowedSelfJoin(), controller, window=3)
+    thr = []
+    for i in range(8 if quick else 12):
+        if i and i % 3 == 0:
+            gen.interval(stage.controller.assignment)   # burst every 3
+        keys = gen.draw_tuples(n)
+        rep = stage.process_interval([(int(k), i) for k in keys])
+        thr.append(rep.throughput)
+    return float(np.mean(thr[2:])), float(np.min(thr[2:]))
+
+
+def rows(quick=True):
+    out = []
+    for name, algo, th in (("mixed_th0.05", "mixed", 0.05),
+                           ("mixed_th0.2", "mixed", 0.2),
+                           ("storm_hash", "mixed", 1e9)):
+        mean_thr, min_thr = _run(algo, th, quick)
+        out.append((f"fig16/{name}", 0.0,
+                    f"mean_throughput={mean_thr:.2f};min={min_thr:.2f}"))
+    return out

@@ -1,0 +1,19 @@
+"""Fig. 17 (appendix): migration cost vs routing-table budget N_A."""
+
+from repro.core.balancer import mixed
+
+from .common import timed, workload
+
+
+def rows(quick=True):
+    out = []
+    nas = (64, 512, 2_000, 50_000) if quick else (64, 128, 256, 512, 1_024,
+                                                  2_000, 10_000, 50_000)
+    for na in nas:
+        _, stats, a, cfg = workload(k=5_000, theta_max=0.08, table_max=na)
+        total = stats.mem.sum()
+        res, us = timed(mixed, stats, a, cfg, repeats=1)
+        out.append((f"fig17/mixed_na{na}", us,
+                    f"mig_frac={res.migration_cost/total:.4f};"
+                    f"table={res.table_size}"))
+    return out

@@ -1,0 +1,26 @@
+"""Fig. 18 (appendix): routing-table growth over repeated adjustments
+(MinMig, no table constraint) -> converges to K*(N_D-1)/N_D."""
+
+from repro.core import Assignment, BalanceConfig, ModHash
+from repro.core.balancer import minmig
+from repro.streams import WorkloadGen
+
+
+def rows(quick=True):
+    out = []
+    k = 2_000 if quick else 10_000
+    for th in (0.02, 0.3):
+        gen = WorkloadGen(k=k, z=0.85, f=1.0, seed=0)
+        a = Assignment(ModHash(15, seed=0))
+        cfg = BalanceConfig(theta_max=th, table_max=10**9)
+        sizes = []
+        for i in range(6 if quick else 20):
+            stats = gen.interval(a, fluctuate=i > 0)
+            res = minmig(stats, a, cfg)
+            a = res.assignment
+            sizes.append(res.table_size)
+        bound = k * 14 / 15
+        out.append((f"fig18/minmig_growth_th{th}", 0.0,
+                    f"final_table={sizes[-1]};bound={bound:.0f};"
+                    f"frac_of_bound={sizes[-1]/bound:.2f}"))
+    return out

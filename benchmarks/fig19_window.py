@@ -1,0 +1,18 @@
+"""Fig. 19 (appendix): migration cost vs window size w."""
+
+from repro.core.balancer import mintable, mixed
+
+from .common import timed, workload
+
+
+def rows(quick=True):
+    out = []
+    ws = (1, 5, 15) if quick else (1, 5, 10, 15, 20)
+    for w in ws:
+        _, stats, a, cfg = workload(k=5_000, window=w)
+        total = stats.mem.sum()
+        for name, algo in (("mixed", mixed), ("mintable", mintable)):
+            res, us = timed(algo, stats, a, cfg, repeats=1)
+            out.append((f"fig19/{name}_w{w}", us,
+                        f"mig_frac={res.migration_cost/total:.4f}"))
+    return out

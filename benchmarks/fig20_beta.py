@@ -1,0 +1,21 @@
+"""Figs. 20/21 (appendix): routing-table size and migration cost vs beta."""
+
+import dataclasses
+
+from repro.core.balancer import minmig
+
+from .common import timed, workload
+
+
+def rows(quick=True):
+    out = []
+    betas = (1.0, 1.5, 2.0) if quick else (1.0, 1.25, 1.5, 1.75, 2.0)
+    for beta in betas:
+        _, stats, a, cfg = workload(k=5_000)
+        cfg = dataclasses.replace(cfg, beta=beta, table_max=10**9)
+        total = stats.mem.sum()
+        res, us = timed(minmig, stats, a, cfg, repeats=1)
+        out.append((f"fig20/minmig_beta{beta}", us,
+                    f"table={res.table_size};"
+                    f"mig_frac={res.migration_cost/total:.4f}"))
+    return out

@@ -1,0 +1,32 @@
+"""Kernel micro-bench (interpret mode on CPU: correctness-path timing only;
+TPU numbers come from the roofline analysis, not wall time here)."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import attention, fused_key_stats, mixed_route
+
+from .common import timed
+
+
+def rows(quick=True):
+    out = []
+    rng = np.random.default_rng(0)
+    keys = jnp.asarray(rng.integers(0, 1024, 8_192), jnp.int32)
+    costs = jnp.ones((8_192,), jnp.float32)
+    (f, c), us = timed(lambda: [x.block_until_ready() for x in
+                                fused_key_stats(keys, costs, 1024)],
+                       repeats=2)
+    out.append(("kernels/key_stats_8k_tokens", us, f"sum={float(f.sum()):.0f}"))
+    tk = jnp.asarray(rng.choice(10_000, 256, replace=False), jnp.int32)
+    td = jnp.asarray(rng.integers(0, 16, 256), jnp.int32)
+    d, us = timed(lambda: mixed_route(keys, tk, td, 16).block_until_ready(),
+                  repeats=2)
+    out.append(("kernels/routing_lookup_8k", us, f"n_dest=16"))
+    q = jnp.asarray(rng.standard_normal((1, 4, 256, 64)), jnp.bfloat16)
+    k = jnp.asarray(rng.standard_normal((1, 2, 256, 64)), jnp.bfloat16)
+    o, us = timed(lambda: attention(q, k, k, block_t=128,
+                                    block_s=128).block_until_ready(),
+                  repeats=2)
+    out.append(("kernels/flash_attention_256", us, "gqa=2"))
+    return out

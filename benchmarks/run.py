@@ -1,0 +1,43 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. --full runs paper-scale sweeps;
+the default quick mode keeps the whole suite to a few minutes on CPU.
+"""
+
+import argparse
+import importlib
+import sys
+import time
+
+MODULES = [
+    "fig07_skew_cdf", "fig08_instances", "fig09_theta", "fig10_keydomain",
+    "fig11_discretization", "fig12_fluctuation", "fig13_throughput",
+    "fig14_realdata", "fig15_scaleout", "fig16_tpch", "fig17_table_size",
+    "fig18_table_growth", "fig19_window", "fig20_beta",
+    "moe_skewshield", "kernels_bench",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module filter")
+    args = ap.parse_args()
+    mods = MODULES if not args.only else [
+        m for m in MODULES if any(o in m for o in args.only.split(","))]
+    print("name,us_per_call,derived")
+    for mod_name in mods:
+        mod = importlib.import_module(f"benchmarks.{mod_name}")
+        t0 = time.time()
+        try:
+            for name, us, derived in mod.rows(quick=not args.full):
+                print(f"{name},{us:.1f},{derived}", flush=True)
+        except Exception as e:  # noqa: BLE001
+            print(f"{mod_name}/ERROR,0,{type(e).__name__}: {e}",
+                  file=sys.stderr, flush=True)
+        print(f"# {mod_name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

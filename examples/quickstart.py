@@ -1,0 +1,42 @@
+"""Quickstart: the paper's technique end to end in 60 lines.
+
+A skewed, fluctuating key stream hits 8 workers; pure hashing leaves one
+worker ~2x overloaded; the Mixed controller fixes it each interval with
+minimal state migration. Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core import (Assignment, BalanceConfig, ModHash,
+                        RebalanceController)
+from repro.streams import KeyedStage, WordCount, WorkloadGen
+
+
+def main() -> None:
+    gen = WorkloadGen(k=5_000, z=1.05, f=0.25, seed=0, window=2)
+
+    controller = RebalanceController(
+        Assignment(ModHash(n_dest=8)),
+        BalanceConfig(theta_max=0.08,   # per-worker overload tolerance
+                      table_max=1_000,  # routing-table budget A_max
+                      window=2),        # state window w
+        algorithm="mixed")              # paper Alg. 4
+    stage = KeyedStage(WordCount(), controller, window=2)
+
+    print(f"{'iv':>3} {'skew':>6} {'theta':>7} {'migrated':>9} "
+          f"{'table':>6} {'throughput':>11}")
+    for i in range(8):
+        if i:
+            gen.interval(controller.assignment)      # workload fluctuates
+        tuples = [(int(k), i) for k in gen.draw_tuples(20_000)]
+        r = stage.process_interval(tuples)
+        print(f"{r.interval:>3} {r.skewness:>6.2f} {r.theta:>7.3f} "
+              f"{r.migrated_bytes:>9.0f} {r.table_size:>6} "
+              f"{r.throughput:>11.2f}")
+
+    print("\nRouting table size stays under A_max; skew pinned near the f-drift floor "
+          "after the first rebalance; only Delta(F,F') keys ever paused.")
+
+
+if __name__ == "__main__":
+    main()

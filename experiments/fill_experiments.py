@@ -1,0 +1,110 @@
+"""Regenerate the §Dry-run and §Roofline sections of EXPERIMENTS.md from the
+dry-run artifacts. Usage: PYTHONPATH=src python experiments/fill_experiments.py
+"""
+
+import json
+import re
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.launch import roofline  # noqa: E402
+
+ROOT = Path(__file__).resolve().parents[1]
+EXP = ROOT / "EXPERIMENTS.md"
+
+
+def dryrun_section() -> str:
+    rows = ["Both meshes lower **and compile** for every applicable "
+            "(arch × shape) cell; skips follow DESIGN.md §4 (long_500k on "
+            "pure full-attention archs).", ""]
+    for mesh in ("single", "multi"):
+        reps = [r for r in roofline.load_all().values()
+                if r.get("mesh") == mesh]
+        ok = [r for r in reps if not r.get("skipped") and "error" not in r]
+        err = [r for r in reps if "error" in r]
+        rows.append(f"**{mesh}-pod** ({'256' if mesh == 'single' else '512'} "
+                    f"chips): {len(ok)} cells compiled, {len(err)} errors.")
+        rows.append("")
+        rows.append("| arch | shape | compile s | HLO GFLOP/dev | "
+                    "HBM GB/dev (args+temp) | collectives seen |")
+        rows.append("|---|---|---|---|---|---|")
+        for r in sorted(ok, key=lambda x: (x["arch"], x["shape"])):
+            mem = r.get("memory", {})
+            gb = (mem.get("argument_bytes", 0) + mem.get("temp_bytes", 0)) / 1e9
+            coll = ",".join(sorted(r.get("collective_bytes", {})))
+            corr = r.get("corrected", {}).get("flops", r.get("flops", 0))
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['compile_s']} | "
+                        f"{corr/1e9:.1f} | {gb:.1f} | {coll} |")
+        for r in err:
+            rows.append(f"| {r['arch']} | {r['shape']} | ERROR | - | - | "
+                        f"{r['error'][:80]} |")
+        rows.append("")
+    return "\n".join(rows)
+
+
+def roofline_section() -> str:
+    out = ["Per-cell lower bounds (seconds per step) on the single-pod mesh; "
+           "the dominant term is the optimization target of §Perf. "
+           "`MODEL/HLO` = analytic useful FLOPs / compiled FLOPs "
+           "(remat & redundancy overhead); `roofline frac` = compute term / "
+           "dominant term (1.0 = compute-bound).", ""]
+    out.append(roofline.table("single"))
+    out.append("")
+    out.append("**Reading of the dominant bottlenecks**:")
+    for name, rep in roofline.load_all().items():
+        if rep.get("mesh") != "single":
+            continue
+        r = roofline.analyze(rep)
+        if r is None:
+            continue
+    out.append(roofline_notes())
+    out.append("")
+    out.append("Multi-pod cells compile without probes (the roofline table "
+               "is single-pod by design; §Dry-run carries the multi-pod "
+               "memory/collective evidence). Batch shards over (pod, data); "
+               "the gradient all-reduce becomes hierarchical: intra-pod "
+               "reduce-scatter + inter-pod all-reduce on the shard.")
+    return "\n".join(out)
+
+
+def roofline_notes() -> str:
+    notes = []
+    for name, rep in sorted(roofline.load_all().items()):
+        if rep.get("mesh") != "single":
+            continue
+        r = roofline.analyze(rep)
+        if r is None:
+            continue
+        lever = {
+            "compute": "already compute-dominated; lever = raise MODEL/HLO "
+                       "(less remat, fused attention kernel)",
+            "memory": "lever = cut bytes: bf16 loss path, windowed-attention "
+                      "key slicing, larger loss chunks, remat policy",
+            "collective": "lever = cut link traffic: keep dispatch local to "
+                          "DP shards, weight-stationary decode matmuls, "
+                          "hierarchical pod-axis reductions",
+        }[r.dominant]
+        notes.append(f"* `{r.arch} × {r.shape}`: {r.dominant}-bound "
+                     f"({max(r.compute_s, r.memory_s, r.collective_s):.2e}s); "
+                     f"{lever}.")
+    return "\n".join(notes)
+
+
+def splice(text: str, tag: str, body: str) -> str:
+    begin, end = f"<!-- {tag}:BEGIN -->", f"<!-- {tag}:END -->"
+    pat = re.compile(re.escape(begin) + ".*?" + re.escape(end), re.S)
+    return pat.sub(begin + "\n" + body + "\n" + end, text)
+
+
+def main() -> None:
+    text = EXP.read_text()
+    text = splice(text, "DRYRUN", dryrun_section())
+    text = splice(text, "ROOFLINE", roofline_section())
+    EXP.write_text(text)
+    print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    main()

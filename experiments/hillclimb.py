@@ -1,0 +1,71 @@
+"""§Perf hillclimb runner: compile a tagged variant of one cell and print the
+three roofline terms next to the stored baseline.
+
+Usage:
+  PYTHONPATH=src python experiments/hillclimb.py <arch> <shape> <tag> \
+      [--microbatches N] [--no-fsdp] [--no-remat]
+
+The variant's report lands in experiments/dryrun/<tag>_<arch>__<shape>__single
+.json; the printed delta feeds the §Perf log in EXPERIMENTS.md.
+"""
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("arch")
+    ap.add_argument("shape")
+    ap.add_argument("tag")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--env", action="append", default=[],
+                    help="FLAG=VAL set before importing repro (repeatable)")
+    args = ap.parse_args()
+
+    import os
+    for kv in args.env:
+        key, _, val = kv.partition("=")
+        os.environ[key] = val or "1"
+
+    from repro.launch.dryrun import RESULTS_DIR, lower_cell
+    from repro.launch import roofline
+
+    rep = lower_cell(args.arch, args.shape, multi_pod=False,
+                     microbatches=args.microbatches, fsdp=not args.no_fsdp,
+                     remat=not args.no_remat, extra_tag=args.tag)
+    out = RESULTS_DIR / (f"{args.tag}_{args.arch}__{args.shape}__single.json")
+    out.write_text(json.dumps(rep, indent=1))
+
+    base_f = RESULTS_DIR / f"{args.arch}__{args.shape}__single.json"
+    base = json.loads(base_f.read_text()) if base_f.exists() else None
+    print(f"\n=== {args.arch} x {args.shape} [{args.tag}] ===")
+    for name, r in (("baseline", base), ("variant", rep)):
+        if r is None or "error" in r:
+            print(f"{name}: {'missing' if r is None else r['error'][:200]}")
+            continue
+        a = roofline.analyze(r)
+        if a is None:
+            print(f"{name}: not analyzable")
+            continue
+        print(f"{name:>9}: compute {a.compute_s:.3e}s  memory "
+              f"{a.memory_s:.3e}s  collective {a.collective_s:.3e}s  "
+              f"dominant={a.dominant}  HBM {a.peak_hbm_gb:.1f}GB  "
+              f"MODEL/HLO {a.useful_ratio:.2f}")
+    if base is not None and "error" not in rep:
+        ab, av = roofline.analyze(base), roofline.analyze(rep)
+        if ab and av:
+            for term in ("compute_s", "memory_s", "collective_s"):
+                b, v = getattr(ab, term), getattr(av, term)
+                if b > 0:
+                    print(f"  {term}: {(v-b)/b*100:+.1f}%")
+
+
+if __name__ == "__main__":
+    main()

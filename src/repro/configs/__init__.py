@@ -1,0 +1,39 @@
+"""Assigned-architecture registry: one module per arch, exact public configs.
+
+Every config is selectable via --arch <id> in the launchers; reduced
+smoke-size variants (same family, tiny dims) come from ``smoke_config``.
+"""
+
+import dataclasses
+import importlib
+
+ARCHS = [
+    "jamba_1_5_large_398b",
+    "internvl2_1b",
+    "dbrx_132b",
+    "granite_moe_3b_a800m",
+    "granite_20b",
+    "granite_8b",
+    "gemma3_12b",
+    "qwen2_7b",
+    "xlstm_125m",
+    "whisper_large_v3",
+]
+
+ALIASES = {a.replace("_", "-"): a for a in ARCHS}
+
+
+def get_config(name: str):
+    mod_name = ALIASES.get(name, name).replace("-", "_")
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.CONFIG
+
+
+def smoke_config(name: str):
+    mod_name = ALIASES.get(name, name).replace("-", "_")
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.SMOKE
+
+
+def all_configs():
+    return {a: get_config(a) for a in ARCHS}

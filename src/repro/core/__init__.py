@@ -1,0 +1,13 @@
+# The paper's primary contribution: mixed-routing workload partitioning with
+# dynamic, migration-aware rebalancing (balancer + controller + data plane).
+
+from . import balancer
+from .balancer import (ALGORITHMS, Assignment, BalanceConfig, ConsistentHash,
+                       KeyStats, ModHash, RebalanceResult, metrics)
+from .controller import ControllerEvent, RebalanceController
+
+__all__ = [
+    "balancer", "ALGORITHMS", "Assignment", "BalanceConfig", "ConsistentHash",
+    "KeyStats", "ModHash", "RebalanceResult", "metrics",
+    "ControllerEvent", "RebalanceController",
+]

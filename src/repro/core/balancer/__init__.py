@@ -1,0 +1,38 @@
+"""Skew-shield balancer: the paper's core contribution as a composable library.
+
+Algorithms (paper Sec. III): simple, llfd (via phased driver), mintable,
+minmig, mixed, mixed_bf; baselines readj, pkg; optimizations compact_mixed +
+HLHE discretization (Sec. IV).
+"""
+
+from .types import (Assignment, BalanceConfig, KeyStats, RebalanceResult,
+                    HashRouter)
+from .hashing import ConsistentHash, ModHash, splitmix64
+from . import metrics
+from .simple import simple
+from .mintable import mintable
+from .minmig import minmig
+from .mixed import mixed, mixed_bf
+from .readj import readj, readj_best_sigma
+from .pkg import pkg_route, pkg_route_stats, PKGResult
+from .compact import compact_mixed, build_groups
+from .discretize import discretize, hlhe_representatives, total_deviation
+
+ALGORITHMS = {
+    "simple": simple,
+    "mintable": mintable,
+    "minmig": minmig,
+    "mixed": mixed,
+    "mixed_bf": mixed_bf,
+    "readj": readj,
+    "compact_mixed": compact_mixed,
+}
+
+__all__ = [
+    "Assignment", "BalanceConfig", "KeyStats", "RebalanceResult", "HashRouter",
+    "ConsistentHash", "ModHash", "splitmix64", "metrics",
+    "simple", "mintable", "minmig", "mixed", "mixed_bf",
+    "readj", "readj_best_sigma", "pkg_route", "pkg_route_stats", "PKGResult",
+    "compact_mixed", "build_groups", "discretize", "hlhe_representatives",
+    "total_deviation", "ALGORITHMS",
+]

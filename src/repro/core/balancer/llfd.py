@@ -1,0 +1,189 @@
+"""Least-Load Fit Decreasing with the Adjust exchange step (paper Alg. 1).
+
+All phase-based algorithms (MinTable / MinMig / Mixed) share a mutable
+:class:`Workspace` over key *indices* and invoke :func:`llfd` for Phase III.
+
+Faithfulness notes (validated against the paper's Fig. 4 worked examples in
+``tests/test_balancer_paper_examples.py``):
+
+* the candidate set C is processed in descending order of c(k), re-evaluated
+  dynamically as Adjust pushes exchanged keys back into C -> a max-heap;
+* destinations are probed in ascending order of the *current estimated* load,
+  ties broken by destination index (matches the k3 step of the Fig. 4 trace);
+* Adjust's exchangeable set E is grown greedily in psi-order over keys
+  currently on the destination with c(k') < c(k) (conditions (i)-(ii)) until
+  L(d) + c(k) - sum_E c(k') <= L_max (condition (iii));
+* the exchange cascade is provably finite in practice (each displaced key is
+  strictly lighter than the key displacing it); a large event budget guards
+  pathological inputs, falling back to plain least-load placement.
+"""
+
+from __future__ import annotations
+
+import heapq
+from typing import Iterable, List, Optional, Set
+
+import numpy as np
+
+from .types import Assignment, BalanceConfig, KeyStats
+
+IN_CANDIDATES = -1
+
+
+class Workspace:
+    """Mutable rebalance state over key indices 0..K-1.
+
+    ``assign[i]`` is the working destination of key index i, or
+    ``IN_CANDIDATES`` while the key sits in the candidate set C.
+    """
+
+    def __init__(self, stats: KeyStats, assignment: Assignment, config: BalanceConfig,
+                 psi: Optional[np.ndarray] = None):
+        self.stats = stats
+        self.config = config
+        self.n_dest = assignment.n_dest
+        self.hash_dest = assignment.hash_router(stats.keys)      # h(k) per index
+        self.orig_dest = assignment.dest(stats.keys)             # F(k) per index
+        self.assign = self.orig_dest.copy()                      # working F'(k)
+        self.cost = stats.cost
+        self.mem = stats.mem
+        # psi: priority used for Phase II selection and Adjust's E (higher first)
+        self.psi = self.cost if psi is None else np.asarray(psi, dtype=np.float64)
+        self.loads = np.bincount(self.assign, weights=self.cost,
+                                 minlength=self.n_dest).astype(np.float64)
+        self.mean_load = float(np.sum(self.cost)) / self.n_dest
+        self.dest_keys: List[Set[int]] = [set() for _ in range(self.n_dest)]
+        for i, d in enumerate(self.assign):
+            self.dest_keys[int(d)].add(i)
+        self.candidates: List[tuple] = []   # max-heap of (-cost, idx)
+
+    # -- candidate set C ----------------------------------------------------
+    def disassociate(self, idx: int) -> None:
+        d = int(self.assign[idx])
+        if d == IN_CANDIDATES:
+            return
+        self.dest_keys[d].discard(idx)
+        self.loads[d] -= self.cost[idx]
+        self.assign[idx] = IN_CANDIDATES
+        heapq.heappush(self.candidates, (-float(self.cost[idx]), int(idx)))
+
+    def place(self, idx: int, d: int) -> None:
+        self.assign[idx] = d
+        self.dest_keys[d].add(idx)
+        self.loads[d] += self.cost[idx]
+
+    def move_back(self, idx: int) -> None:
+        """Phase-I style 'virtual' move of a key to its hash destination."""
+        d_old = int(self.assign[idx])
+        d_new = int(self.hash_dest[idx])
+        if d_old == d_new:
+            return
+        if d_old != IN_CANDIDATES:
+            self.dest_keys[d_old].discard(idx)
+            self.loads[d_old] -= self.cost[idx]
+        self.place(idx, d_new)
+
+    # -- Phase II -----------------------------------------------------------
+    def prepare(self) -> None:
+        """Disassociate keys from every overloaded instance by psi order."""
+        l_max = self.config.l_max(self.mean_load)
+        for d in range(self.n_dest):
+            if self.loads[d] <= l_max:
+                continue
+            members = sorted(self.dest_keys[d],
+                             key=lambda i: (-self.psi[i], i))
+            for idx in members:
+                if self.loads[d] <= l_max:
+                    break
+                self.disassociate(idx)
+
+    # -- derived outputs ----------------------------------------------------
+    def result_table(self) -> dict:
+        """A' = {key id -> dest}  for keys whose working dest != hash dest."""
+        diff = self.assign != self.hash_dest
+        ids = self.stats.keys[diff]
+        dst = self.assign[diff]
+        return {int(k): int(d) for k, d in zip(ids, dst)}
+
+    def moved_mask(self) -> np.ndarray:
+        return self.assign != self.orig_dest
+
+
+def _find_exchange_set(ws: Workspace, idx: int, d: int, l_max: float) -> Optional[List[int]]:
+    """Adjust's exchangeable set E (conditions (i)-(iii)), greedy in psi order."""
+    c_k = ws.cost[idx]
+    cands = [j for j in ws.dest_keys[d] if ws.cost[j] < c_k]        # (i) + (ii)
+    if not cands:
+        return None
+    cands.sort(key=lambda j: (-ws.psi[j], j))
+    need = ws.loads[d] + c_k - l_max
+    out: List[int] = []
+    removed = 0.0
+    for j in cands:
+        if removed >= need:
+            break
+        out.append(j)
+        removed += ws.cost[j]
+    if removed >= need:                                              # (iii)
+        return out
+    return None
+
+
+def _adjust(ws: Workspace, idx: int, d: int, l_max: float) -> bool:
+    """Paper Alg. 1 lines 10-20."""
+    if ws.loads[d] + ws.cost[idx] <= l_max:
+        return True
+    exch = _find_exchange_set(ws, idx, d, l_max)
+    if exch is None:
+        return False
+    for j in exch:
+        ws.disassociate(j)
+    return True
+
+
+def llfd(ws: Workspace) -> None:
+    """Phase III: drain the candidate heap (paper Alg. 1 lines 1-9).
+
+    Mutates ``ws`` in place; the routing table is derived afterwards via
+    ``ws.result_table()``.
+    """
+    l_max = ws.config.l_max(ws.mean_load)
+    events = 0
+    budget = ws.config.max_llfd_events
+    while ws.candidates:
+        neg_c, idx = heapq.heappop(ws.candidates)
+        if ws.assign[idx] != IN_CANDIDATES:     # stale heap entry
+            continue
+        events += 1
+        placed = False
+        if events <= budget:
+            order = np.argsort(ws.loads, kind="stable")  # ascending load, ties by index
+            for d in order:
+                if _adjust(ws, idx, int(d), l_max):
+                    ws.place(idx, int(d))
+                    placed = True
+                    break
+        if not placed:
+            # No destination admits this key even with exchanges — the paper's
+            # analysis assumes c(k1) < mean so this case is outside Theorems
+            # 1/2; in production it happens (one key heavier than L_max, e.g.
+            # one expert hotter than a whole shard's budget). Place least-load,
+            # then shed strictly-lighter keys until the destination carries no
+            # more than the oversized key demands (Adjust with relaxed (iii)).
+            d = int(np.argmin(ws.loads))
+            ws.place(idx, d)
+            target = max(l_max, float(ws.cost[idx]))
+            if ws.loads[d] > target:
+                members = sorted(
+                    (j for j in ws.dest_keys[d]
+                     if j != idx and ws.cost[j] < ws.cost[idx]),
+                    key=lambda j: (-ws.psi[j], j))
+                for j in members:
+                    if ws.loads[d] <= target:
+                        break
+                    ws.disassociate(j)
+
+
+def seed_candidates(ws: Workspace, idxs: Iterable[int]) -> None:
+    for idx in idxs:
+        ws.disassociate(int(idx))

@@ -1,0 +1,65 @@
+"""Balance / migration metrics (paper Sec. II-A and Sec. V 'Evaluation Metrics')."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .types import Assignment, KeyStats
+
+
+def loads_for(stats: KeyStats, dests: np.ndarray, n_dest: int) -> np.ndarray:
+    """L(d) = sum of c(k) over keys assigned to d."""
+    return np.bincount(dests, weights=stats.cost, minlength=n_dest).astype(np.float64)
+
+
+def loads(stats: KeyStats, assignment: Assignment) -> np.ndarray:
+    return loads_for(stats, assignment.dest(stats.keys), assignment.n_dest)
+
+
+def theta(loads_arr: np.ndarray) -> float:
+    """max_d (L(d) - mean) / mean — the one-sided overload indicator.
+
+    This is the form the paper's analysis actually uses (Lemma 3 defines
+    theta_max = max_d (L(d) - L_bar)/L_bar) and the constraint every
+    algorithm enforces (L(d) <= L_max). The two-sided variant is
+    :func:`theta_two_sided`.
+    """
+    mean = float(np.mean(loads_arr))
+    if mean <= 0.0:
+        return 0.0
+    return max(0.0, float(np.max(loads_arr - mean) / mean))
+
+
+def theta_two_sided(loads_arr: np.ndarray) -> float:
+    """max_d |L(d) - mean| / mean (paper Sec. II-A's display form)."""
+    mean = float(np.mean(loads_arr))
+    if mean <= 0.0:
+        return 0.0
+    return float(np.max(np.abs(loads_arr - mean)) / mean)
+
+
+def skewness(loads_arr: np.ndarray) -> float:
+    """max L(d) / mean L  (the 'workload skewness' metric of Sec. V)."""
+    mean = float(np.mean(loads_arr))
+    if mean <= 0.0:
+        return 1.0
+    return float(np.max(loads_arr) / mean)
+
+
+def migration_cost(stats: KeyStats, old: Assignment, new: Assignment) -> float:
+    """M_i(w, F, F') = sum of S(k, w) over Delta(F, F') (Eq. 2)."""
+    moved = old.dest(stats.keys) != new.dest(stats.keys)
+    return float(np.sum(stats.mem[moved]))
+
+
+def moved_keys(stats: KeyStats, old: Assignment, new: Assignment) -> np.ndarray:
+    moved = old.dest(stats.keys) != new.dest(stats.keys)
+    return stats.keys[moved]
+
+
+def migration_fraction(stats: KeyStats, old: Assignment, new: Assignment) -> float:
+    """Migration cost as a fraction of total maintained state (paper's metric)."""
+    total = float(np.sum(stats.mem))
+    if total <= 0.0:
+        return 0.0
+    return migration_cost(stats, old, new) / total

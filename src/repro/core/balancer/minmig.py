@@ -1,0 +1,16 @@
+"""MinMig (paper Alg. 3): no cleaning, psi = largest gamma(k,w) = c^beta / S first."""
+
+from __future__ import annotations
+
+import time
+
+from .phased import finish, run_phases
+from .types import Assignment, BalanceConfig, KeyStats, RebalanceResult
+
+
+def minmig(stats: KeyStats, assignment: Assignment,
+           config: BalanceConfig) -> RebalanceResult:
+    t0 = time.perf_counter()
+    ws = run_phases(stats, assignment, config, psi=stats.gamma(config.beta),
+                    clean_idxs=None)                  # Phase I: do nothing
+    return finish(ws, assignment, config, t0)

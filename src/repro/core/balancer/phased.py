@@ -1,0 +1,58 @@
+"""Shared Phase I/II/III driver for MinTable, MinMig and Mixed (paper Sec. III).
+
+Each algorithm is a different Phase-I cleaning policy + psi criterion feeding
+the same LLFD Phase III; this module owns the plumbing and result assembly.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import numpy as np
+
+from . import metrics
+from .llfd import Workspace, llfd
+from .types import Assignment, BalanceConfig, KeyStats, RebalanceResult
+
+
+def run_phases(stats: KeyStats, assignment: Assignment, config: BalanceConfig,
+               *, psi: Optional[np.ndarray] = None,
+               clean_idxs: Optional[np.ndarray] = None) -> Workspace:
+    """Phase I (move back ``clean_idxs``) -> Phase II -> Phase III (LLFD)."""
+    ws = Workspace(stats, assignment, config, psi=psi)
+    if clean_idxs is not None:
+        for idx in np.asarray(clean_idxs, dtype=np.int64):
+            ws.move_back(int(idx))
+    ws.prepare()
+    llfd(ws)
+    return ws
+
+
+def finish(ws: Workspace, assignment: Assignment, config: BalanceConfig,
+           t0: float, **meta: float) -> RebalanceResult:
+    table = ws.result_table()
+    new = Assignment(assignment.hash_router, table)
+    moved = ws.moved_mask()
+    th = metrics.theta(ws.loads)
+    return RebalanceResult(
+        assignment=new,
+        moved_keys=ws.stats.keys[moved],
+        migration_cost=float(np.sum(ws.mem[moved])),
+        loads=ws.loads.copy(),
+        table_size=len(table),
+        theta=th,
+        feasible_balance=th <= config.theta_max + 1e-9,
+        feasible_table=len(table) <= config.table_max,
+        plan_time_s=time.perf_counter() - t0,
+        meta=dict(meta),
+    )
+
+
+def table_key_indices(stats: KeyStats, assignment: Assignment) -> np.ndarray:
+    """Indices (into stats arrays) of keys that currently sit in the table A."""
+    if not assignment.table:
+        return np.zeros((0,), dtype=np.int64)
+    tkeys = np.fromiter(assignment.table.keys(), dtype=np.int64,
+                        count=len(assignment.table))
+    return np.flatnonzero(np.isin(stats.keys, tkeys))

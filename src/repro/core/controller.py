@@ -1,0 +1,122 @@
+"""Interval-driven rebalance controller (paper Sec. IV, Fig. 5).
+
+The controller is pure host-side logic reused by three substrates:
+
+* the stream engine (``repro.streams``) — tuples between operators,
+* the MoE SkewShield placer (``repro.models.moe``) — experts over EP shards,
+* the serving router (``repro.serve``) — sessions over replica groups.
+
+Protocol per interval (paper's numbered steps):
+  1. workers report per-key stats (collected for us by callers / key_stats kernel)
+  2. controller evaluates imbalance; decides whether to trigger
+  3. controller runs the algorithm (Mixed by default) -> F', Delta(F,F')
+  4. Pause: only keys in Delta are affected (double-buffered table install)
+  5-6. state migration + acks (executor callback)
+  7. Resume with the new assignment
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, List, Optional
+
+import numpy as np
+
+from .balancer import (ALGORITHMS, Assignment, BalanceConfig, KeyStats,
+                       RebalanceResult, metrics)
+
+
+@dataclasses.dataclass
+class ControllerEvent:
+    interval: int
+    triggered: bool
+    theta_before: float
+    result: Optional[RebalanceResult] = None
+
+    @property
+    def theta_after(self) -> float:
+        return self.result.theta if self.result else self.theta_before
+
+    @property
+    def migration_cost(self) -> float:
+        return self.result.migration_cost if self.result else 0.0
+
+
+MigrationExecutor = Callable[[np.ndarray, Assignment, Assignment], None]
+"""(moved_keys, old_assignment, new_assignment) -> performs the state moves."""
+
+
+class RebalanceController:
+    """Owns the assignment function F and updates it at interval boundaries."""
+
+    def __init__(self, assignment: Assignment, config: BalanceConfig,
+                 algorithm: str = "mixed",
+                 executor: Optional[MigrationExecutor] = None):
+        if algorithm not in ALGORITHMS:
+            raise ValueError(f"unknown algorithm {algorithm!r}; "
+                             f"choose from {sorted(ALGORITHMS)}")
+        self.assignment = assignment
+        self.config = config
+        self.algorithm_name = algorithm
+        self._algorithm = ALGORITHMS[algorithm]
+        self.executor = executor
+        self.history: List[ControllerEvent] = []
+        self._interval = 0
+
+    # -- paper step 2: trigger decision --------------------------------------
+    def should_trigger(self, stats: KeyStats) -> bool:
+        loads = metrics.loads(stats, self.assignment)
+        return metrics.theta(loads) > self.config.theta_max
+
+    # -- paper steps 2-7 ------------------------------------------------------
+    def on_interval(self, stats: KeyStats, force: bool = False) -> ControllerEvent:
+        self._interval += 1
+        loads = metrics.loads(stats, self.assignment)
+        th = metrics.theta(loads)
+        if not force and th <= self.config.theta_max:
+            ev = ControllerEvent(self._interval, False, th)
+            self.history.append(ev)
+            return ev
+        result = self._algorithm(stats, self.assignment, self.config)
+        # Pause/migrate/Resume: the executor moves state for Delta(F,F') only;
+        # in jitted substrates this is a step-boundary double-buffer swap.
+        if self.executor is not None and len(result.moved_keys):
+            self.executor(result.moved_keys, self.assignment, result.assignment)
+        self.assignment = result.assignment
+        ev = ControllerEvent(self._interval, True, th, result)
+        self.history.append(ev)
+        return ev
+
+    # -- elastic scale-out/in (paper Fig. 15) ---------------------------------
+    def rescale(self, n_dest: int, stats: KeyStats) -> ControllerEvent:
+        """Change the number of workers and rebalance onto the new fleet.
+
+        Keys keep their table entries (still valid destinations if < n_dest);
+        the hash router is swapped for the same family at the new size, so
+        with consistent hashing only ~K/N keys re-hash. The regular algorithm
+        then restores balance with minimal migration.
+        """
+        old_assignment = self.assignment
+        new_router = old_assignment.hash_router.with_n_dest(n_dest)
+        table = {k: d for k, d in old_assignment.table.items() if d < n_dest}
+        interim = Assignment(new_router, table)
+        # keys that re-hash under the resized router migrate physically NOW —
+        # the optimizer below only sees deltas relative to the interim mapping.
+        if self.executor is not None:
+            rehashed = metrics.moved_keys(stats, old_assignment, interim)
+            if len(rehashed):
+                self.executor(rehashed, old_assignment, interim)
+        self.assignment = interim
+        return self.on_interval(stats, force=True)
+
+    # -- fleet health: straggler demotion (beyond-paper, production posture) --
+    def derate_worker(self, d: int, factor: float, stats: KeyStats) -> ControllerEvent:
+        """Treat worker ``d`` as ``factor``x slower (straggler): inflate the
+        cost of its keys so the balancer migrates load away proportionally."""
+        dests = self.assignment.dest(stats.keys)
+        cost = stats.cost.copy()
+        cost[dests == d] *= factor
+        derated = KeyStats(keys=stats.keys, cost=cost, mem=stats.mem,
+                           freq=stats.freq)
+        return self.on_interval(derated, force=True)

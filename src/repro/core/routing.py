@@ -1,0 +1,72 @@
+"""Data-plane mixed routing F(k) (paper Eq. 1), vectorized in JAX.
+
+The controller hands the data plane a *dense override table* (padded key/dest
+arrays); every tuple/token evaluates
+
+    dest(k) = table_dest[j]   if table_key[j] == k for some j
+            = fmix32(k) % n_dest   otherwise
+
+fmix32 (murmur3 finalizer) is the device-canonical hash: TPUs have no 64-bit
+integer units and jnp's uint64 needs x64 mode, so the 32-bit mix is shared
+bit-for-bit between the host planner (balancer.hashing.Hash32), this module,
+and the Pallas kernel (kernels.routing_lookup) — tested in
+tests/test_routing.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.ref import fmix32
+
+
+def hash_route(keys: jax.Array, n_dest: int, seed: int = 0) -> jax.Array:
+    """h(k) = fmix32(k ^ seed) mod n_dest — matches Hash32 on host."""
+    h = fmix32(keys.astype(jnp.uint32), seed)
+    return (h % jnp.uint32(n_dest)).astype(jnp.int32)
+
+
+@dataclasses.dataclass(frozen=True)
+class RoutingTableDev:
+    """Device-side routing table: keys sorted ascending, INT32_MAX padded."""
+
+    keys: jax.Array   # (A_max,) int32
+    dests: jax.Array  # (A_max,) int32
+
+    @staticmethod
+    def from_assignment(assignment, a_max: int) -> "RoutingTableDev":
+        tk, td = assignment.table_arrays(a_max)
+        pad = tk < 0
+        tk = np.where(pad, np.iinfo(np.int32).max, tk).astype(np.int32)
+        order = np.argsort(tk, kind="stable")
+        return RoutingTableDev(keys=jnp.asarray(tk[order]),
+                               dests=jnp.asarray(td[order].astype(np.int32)))
+
+
+def route(keys: jax.Array, table: Optional[RoutingTableDev], n_dest: int,
+          seed: int = 0) -> jax.Array:
+    """Vectorized F(k): table override else hash (paper Eq. 1)."""
+    base = hash_route(keys, n_dest, seed)
+    if table is None:
+        return base
+    keys32 = keys.astype(jnp.int32)
+    pos = jnp.searchsorted(table.keys, keys32)
+    pos = jnp.clip(pos, 0, table.keys.shape[0] - 1)
+    hit = table.keys[pos] == keys32
+    return jnp.where(hit, table.dests[pos], base).astype(jnp.int32)
+
+
+def route_tokens_to_shards(keys: jax.Array, table_keys: jax.Array,
+                           table_dests: jax.Array, n_dest: int,
+                           seed: int = 0) -> jax.Array:
+    """jit-friendly flat-argument variant (used inside train/serve steps)."""
+    base = hash_route(keys, n_dest, seed)
+    pos = jnp.searchsorted(table_keys, keys.astype(jnp.int32))
+    pos = jnp.clip(pos, 0, table_keys.shape[0] - 1)
+    hit = table_keys[pos] == keys.astype(jnp.int32)
+    return jnp.where(hit, table_dests[pos], base).astype(jnp.int32)

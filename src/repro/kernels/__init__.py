@@ -1,0 +1,6 @@
+"""Pallas TPU kernels (validated in interpret mode on CPU) + jnp oracles."""
+
+from . import ref
+from .ops import attention, fused_key_stats, mixed_route
+
+__all__ = ["ref", "attention", "fused_key_stats", "mixed_route"]

@@ -1,0 +1,55 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+``interpret`` auto-detection: on CPU (this container) kernels run in
+interpret mode — the kernel body executes in Python for correctness
+validation; on TPU they compile to Mosaic. Callers can force either.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .flash_attention import flash_attention as _flash
+from .key_stats import key_stats as _key_stats
+from .routing_lookup import routing_lookup as _routing
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def fused_key_stats(keys: jax.Array, costs: Optional[jax.Array],
+                    num_keys: int, interpret: Optional[bool] = None):
+    """g(k), c(k) for one interval's stream (paper Fig. 5 step 1)."""
+    if costs is None:
+        costs = jnp.ones(keys.shape, jnp.float32)
+    interpret = _interpret_default() if interpret is None else interpret
+    return _key_stats(keys, costs, num_keys, interpret=interpret)
+
+
+def mixed_route(keys: jax.Array, table_keys: jax.Array,
+                table_dests: jax.Array, n_dest: int, seed: int = 0,
+                interpret: Optional[bool] = None) -> jax.Array:
+    """F(k) per paper Eq. 1 with the override table pinned in VMEM."""
+    interpret = _interpret_default() if interpret is None else interpret
+    return _routing(keys, table_keys, table_dests, n_dest, seed=seed,
+                    interpret=interpret)
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, causal: bool = True,
+              window: int = 0, interpret: Optional[bool] = None,
+              block_t: int = 512, block_s: int = 512) -> jax.Array:
+    """Blocked causal/sliding-window GQA attention.
+
+    Falls back to the jnp oracle for non-causal full attention (encoder
+    self-attention / cross-attention), which XLA already fuses well.
+    """
+    if not causal and window <= 0:
+        return ref.flash_attention(q, k, v, causal=False, window=0)
+    interpret = _interpret_default() if interpret is None else interpret
+    return _flash(q, k, v, causal=causal, window=window, interpret=interpret,
+                  block_t=block_t, block_s=block_s)

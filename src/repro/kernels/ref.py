@@ -1,0 +1,79 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+Each function mirrors its kernel's public semantics exactly; the kernel tests
+sweep shapes/dtypes and assert allclose against these.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fmix32(x: jax.Array, seed: int = 0) -> jax.Array:
+    """jnp murmur3 finalizer — bit-identical to balancer.hashing.fmix32."""
+    h = x.astype(jnp.uint32) ^ jnp.uint32(seed & 0xFFFFFFFF)
+    h = h ^ (h >> jnp.uint32(16))
+    h = h * jnp.uint32(0x85EBCA6B)
+    h = h ^ (h >> jnp.uint32(13))
+    h = h * jnp.uint32(0xC2B2AE35)
+    h = h ^ (h >> jnp.uint32(16))
+    return h
+
+
+def key_stats(keys: jax.Array, costs: jax.Array, num_keys: int):
+    """Per-key tuple frequency g(k) and cost c(k) over one interval's stream.
+
+    keys: (N,) int32 in [0, num_keys); costs: (N,) float. Entries with
+    key < 0 are padding and ignored.
+    """
+    valid = keys >= 0
+    k = jnp.where(valid, keys, 0)
+    freq = jnp.zeros((num_keys,), jnp.float32).at[k].add(
+        jnp.where(valid, 1.0, 0.0))
+    cost = jnp.zeros((num_keys,), jnp.float32).at[k].add(
+        jnp.where(valid, costs.astype(jnp.float32), 0.0))
+    return freq, cost
+
+
+def routing_lookup(keys: jax.Array, table_keys: jax.Array,
+                   table_dests: jax.Array, n_dest: int,
+                   seed: int = 0) -> jax.Array:
+    """Mixed routing F(k) (paper Eq. 1): VMEM-table override else hash.
+
+    table_keys: (A,) int32, -1 = empty slot. Returns int32 destinations.
+    """
+    base = (fmix32(keys, seed) % jnp.uint32(n_dest)).astype(jnp.int32)
+    hit = keys[:, None] == table_keys[None, :]            # (N, A)
+    any_hit = jnp.any(hit, axis=1)
+    slot = jnp.argmax(hit, axis=1)
+    return jnp.where(any_hit, table_dests[slot], base).astype(jnp.int32)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, window: int = 0,
+                    scale: float | None = None) -> jax.Array:
+    """Reference GQA attention.
+
+    q: (B, Hq, T, D); k, v: (B, Hkv, S, D) with Hq % Hkv == 0.
+    window > 0 applies sliding-window masking of that width (local layers).
+    """
+    b, hq, t, d = q.shape
+    hkv, s = k.shape[1], k.shape[2]
+    group = hq // hkv
+    scale = (d ** -0.5) if scale is None else scale
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum("bhtd,bhsd->bhts", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    q_pos = jnp.arange(t)[:, None] + (s - t)   # right-aligned (decode-friendly)
+    k_pos = jnp.arange(s)[None, :]
+    mask = jnp.ones((t, s), dtype=bool)
+    if causal:
+        mask = mask & (k_pos <= q_pos)
+    if window > 0:
+        mask = mask & (k_pos > q_pos - window)
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhts,bhsd->bhtd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)

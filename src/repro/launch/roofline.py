@@ -1,0 +1,193 @@
+"""Roofline analysis over the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape x mesh) cell, three per-step time lower bounds on TPU v5e:
+
+  compute    = HLO_FLOPs_per_device / peak_FLOPs            (197 TF bf16)
+  memory     = HLO_bytes_per_device / HBM_bw                (819 GB/s)
+  collective = link_bytes_per_device / link_bw              (~50 GB/s/link)
+
+Sources: ``compiled.cost_analysis()`` per-device flops/bytes, depth-corrected
+by the 2-vs-3-group probes (XLA's cost model counts a while body once; the
+dry-run unrolls probes so the correction is exact for architectures without
+inner time scans). Collective bytes are parsed from the optimized HLO;
+all-reduce is charged 2x (ring reduce-scatter + all-gather), others 1x.
+SSM inner-scan residuals (jamba's chunk carry, xlstm's time scan) are added
+analytically below — they are elementwise-dominated and small vs the GEMMs.
+
+MODEL_FLOPS = 6*N*D (train, dense), 6*N_active*D (MoE), 2*N_active*tokens
+(decode fwd-only); the ratio MODEL_FLOPS / HLO_FLOPs exposes remat/redundancy.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+from typing import Dict, Optional
+
+from repro.configs import get_config
+from repro.models import model_schema, schema as schema_mod
+from repro.models.config import SHAPES
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def active_params(cfg) -> int:
+    """Parameters touched per token (MoE counts top-k experts only)."""
+    total = schema_mod.count_params(model_schema(cfg))
+    if not cfg.moe_experts:
+        return total
+    period = cfg.pattern_period
+    n_groups = cfg.n_layers // period
+    from repro.models.moe import moe_schema
+    per_layer_moe = schema_mod.count_params(moe_schema(cfg)) // 1
+    n_moe_layers = sum(cfg.layer_is_moe(j) for j in range(period)) * n_groups
+    moe_total = per_layer_moe * n_moe_layers
+    expert_part = moe_total * (1 - 1 / cfg.moe_experts * 0)  # router negligible
+    dense = total - moe_total
+    active_moe = moe_total * cfg.moe_topk / cfg.moe_experts
+    return int(dense + active_moe)
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic 'useful' FLOPs for the whole step (global, all devices)."""
+    n_act = active_params(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_act * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_act * tokens
+    # decode: one token per sequence + attention over the cache
+    tokens = shape.global_batch * 1
+    attn = 0.0
+    n_attn = sum(1 for j in range(cfg.pattern_period)
+                 if cfg.layer_pattern[j] == "attn")
+    n_attn *= cfg.n_layers // cfg.pattern_period
+    attn = 4.0 * n_attn * cfg.n_heads * cfg.hd * shape.seq_len * tokens
+    return 2.0 * n_act * tokens + attn
+
+
+def ssm_inner_residual_flops(cfg, shape, devices: int) -> float:
+    """Per-device FLOPs of inner time loops the probes cannot see."""
+    if shape.kind == "decode":
+        return 0.0
+    tokens = shape.global_batch * shape.seq_len
+    period = cfg.pattern_period
+    n_groups = cfg.n_layers // period
+    total = 0.0
+    fb = 3.0 if shape.kind == "train" else 1.0   # fwd+bwd multiplier
+    for j in range(period):
+        kind = cfg.layer_pattern[j]
+        if kind == "mamba":
+            di = cfg.mamba_expand * cfg.d_model
+            # h_all = a*h + b per element over the carry path
+            total += 3.0 * tokens * di * cfg.mamba_d_state * n_groups * fb
+        elif kind == "slstm":
+            d = cfg.d_model
+            # recurrent matmul R (D x 4D) each step + gates
+            total += (2.0 * tokens * d * 4 * d + 30.0 * tokens * d) \
+                * n_groups * fb
+        elif kind == "mlstm":
+            d = cfg.d_model
+            h = cfg.n_heads
+            dh = d // h
+            chunk = 128
+            # intra-chunk (c x c) attention-like terms
+            total += (4.0 * tokens * chunk * d) * n_groups * fb
+    return total / devices
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    hlo_flops_device: float
+    useful_ratio: float
+    bound_frac: float           # compute_s / max(all three) = roofline fraction
+    peak_hbm_gb: float
+    note: str = ""
+
+
+def analyze(report: dict) -> Optional[Roofline]:
+    if report.get("skipped") or "error" in report:
+        return None
+    cfg = get_config(report["arch"])
+    shape = SHAPES[report["shape"]]
+    dev = report["devices"]
+    corr = report.get("corrected", {})
+    if "flops" not in corr:
+        return None
+    flops_dev = corr["flops"] + ssm_inner_residual_flops(cfg, shape, dev)
+    bytes_dev = corr["bytes_accessed"]
+    coll = corr.get("collective_bytes", {})
+    link_bytes = sum(v * (2.0 if op == "all-reduce" else 1.0)
+                     for op, v in coll.items())
+    compute_s = flops_dev / PEAK_FLOPS
+    memory_s = bytes_dev / HBM_BW
+    collective_s = link_bytes / LINK_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    mf_dev = mf / dev
+    useful = mf_dev / flops_dev if flops_dev else 0.0
+    bound = compute_s / max(max(terms.values()), 1e-30)
+    mem = report.get("memory", {})
+    peak = (mem.get("argument_bytes", 0) + mem.get("temp_bytes", 0)) / 1e9
+    return Roofline(
+        arch=report["arch"], shape=report["shape"], mesh=report["mesh"],
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        dominant=dominant, model_flops=mf, hlo_flops_device=flops_dev,
+        useful_ratio=useful, bound_frac=bound, peak_hbm_gb=peak)
+
+
+def load_all(tag: str = "") -> Dict[str, dict]:
+    """Load artifacts; tag='' returns ONLY untagged baselines."""
+    out = {}
+    prefix = f"{tag}_" if tag else ""
+    for f in sorted(RESULTS_DIR.glob(f"{prefix}*.json")):
+        rep = json.loads(f.read_text())
+        if (rep.get("tag") or "") != tag:
+            continue
+        out[f.stem] = rep
+    return out
+
+
+def table(mesh: str = "single", tag: str = "") -> str:
+    rows = []
+    hdr = (f"| arch | shape | compute s | memory s | collective s | dominant "
+           f"| MODEL/HLO | roofline frac | HBM GB/dev |")
+    sep = "|" + "---|" * 9
+    rows.append(hdr)
+    rows.append(sep)
+    for name, rep in load_all(tag).items():
+        if rep.get("mesh") != mesh:
+            continue
+        r = analyze(rep)
+        if r is None:
+            status = rep.get("reason", rep.get("error", "?"))[:40]
+            rows.append(f"| {rep.get('arch')} | {rep.get('shape')} | - | - | "
+                        f"- | {status} | - | - | - |")
+            continue
+        rows.append(
+            f"| {r.arch} | {r.shape} | {r.compute_s:.3e} | {r.memory_s:.3e} |"
+            f" {r.collective_s:.3e} | **{r.dominant}** | {r.useful_ratio:.2f}"
+            f" | {r.bound_frac:.2f} | {r.peak_hbm_gb:.1f} |")
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    import sys
+    mesh = sys.argv[1] if len(sys.argv) > 1 else "single"
+    print(table(mesh))

@@ -1,0 +1,81 @@
+"""ShapeDtypeStruct stand-ins for every (arch x shape) dry-run cell.
+
+``input_specs`` returns the abstract inputs for the step that the cell
+lowers: train/prefill -> (B, seq) token batches; decode -> one new token
+against a KV cache of seq_len. Modality frontends are stubs per the
+assignment: whisper gets precomputed frame embeddings, internvl2 precomputed
+patch embeddings.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import cache_schema, model_schema, schema as schema_mod
+from repro.models.config import ModelConfig, SHAPES, ShapeConfig
+from repro.sharding import rules
+
+SDS = jax.ShapeDtypeStruct
+
+
+def cell_applicable(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """The assignment's skip rules (documented in DESIGN.md)."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "pure full-attention arch: 500k decode skipped"
+    return True, ""
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, SDS]:
+    b = shape.global_batch
+    if shape.kind == "train":
+        out = {"tokens": SDS((b, shape.seq_len), jnp.int32),
+               "labels": SDS((b, shape.seq_len), jnp.int32)}
+        if cfg.frontend == "audio_stub":
+            out["frames"] = SDS((b, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+        elif cfg.frontend == "vision_stub":
+            out["pixel_embeds"] = SDS((b, cfg.prefix_len, cfg.d_model),
+                                      jnp.bfloat16)
+        return out
+    if shape.kind == "prefill":
+        out = {"tokens": SDS((b, shape.seq_len), jnp.int32)}
+        if cfg.frontend == "audio_stub":
+            out["frames"] = SDS((b, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+        elif cfg.frontend == "vision_stub":
+            out["pixel_embeds"] = SDS((b, cfg.prefix_len, cfg.d_model),
+                                      jnp.bfloat16)
+        return out
+    # decode: one new token with a KV cache of seq_len
+    out = {"tokens": SDS((b, 1), jnp.int32)}
+    if cfg.frontend == "audio_stub":
+        out["encoder_out"] = SDS((b, cfg.encoder_seq, cfg.d_model),
+                                 jnp.bfloat16)
+    return out
+
+
+def batch_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    bspec = rules.batch_pspec(mesh, shape.global_batch)
+    bs = batch_specs(cfg, shape)
+    out = {}
+    for k, v in bs.items():
+        parts = [bspec[0] if bspec else None] + [None] * (len(v.shape) - 1)
+        out[k] = NamedSharding(mesh, P(*parts))
+    return out
+
+
+def cache_max_seq(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    extra = cfg.prefix_len if cfg.frontend == "vision_stub" else 0
+    return shape.seq_len + extra
+
+
+def decode_cache_specs(cfg: ModelConfig, shape: ShapeConfig):
+    sch = cache_schema(cfg, shape.global_batch, cache_max_seq(cfg, shape))
+    return schema_mod.abstract(sch), sch
+
+
+def param_specs(cfg: ModelConfig):
+    sch = model_schema(cfg)
+    return schema_mod.abstract(sch), sch

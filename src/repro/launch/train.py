@@ -1,0 +1,113 @@
+"""Training launcher.
+
+Two modes:
+  * ``--mode local``  — run real steps at reduced (smoke) scale on this host:
+    full stack (keyed pipeline → microbatched AdamW → checkpoints →
+    SkewShield for MoE archs). Works on CPU.
+  * ``--mode lower``  — lower + compile the FULL config's train step for the
+    production mesh (single or multi pod) and print the memory/cost digest;
+    this is what a real cluster job would execute per worker before the
+    first step, so a green run here is the go/no-go signal.
+
+Per-arch perf flags (§Perf-validated) are applied automatically unless
+--no-perf-flags. Examples:
+
+  PYTHONPATH=src python -m repro.launch.train --arch granite-8b --steps 20
+  PYTHONPATH=src python -m repro.launch.train --arch dbrx-132b \
+      --mode lower --shape train_4k --mesh multi
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+
+
+def _apply_perf_flags(arch: str, enable: bool) -> None:
+    if not enable:
+        return
+    os.environ.setdefault("REPRO_PERF_MOE_GROUPED", "1")
+    cfgless_indivisible = {"qwen2_7b", "whisper_large_v3", "internvl2_1b",
+                           "granite_moe_3b_a800m", "xlstm_125m"}
+    if arch in cfgless_indivisible:
+        os.environ.setdefault("REPRO_PERF_ATTN_SHARD", "1")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--mode", choices=["local", "lower"], default="local")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--ckpt", default="/tmp/repro_ckpt")
+    ap.add_argument("--no-perf-flags", action="store_true")
+    args = ap.parse_args()
+    arch = args.arch.replace("-", "_")
+    _apply_perf_flags(arch, not args.no_perf_flags)
+
+    if args.mode == "lower":
+        # production-mesh compile: must set device count before jax loads
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+        from repro.launch.dryrun import lower_cell
+        rep = lower_cell(arch, args.shape, multi_pod=args.mesh == "multi",
+                         microbatches=args.microbatches)
+        mem = rep.get("memory", {})
+        print(f"compiled {arch} x {args.shape} on {rep.get('devices')} chips "
+              f"in {rep.get('compile_s')}s")
+        print(f"  HLO flops/dev: {rep.get('flops'):.3e} "
+              f"(corrected {rep.get('corrected', {}).get('flops', 0):.3e})")
+        print(f"  HBM args+temp: "
+              f"{(mem.get('argument_bytes', 0) + mem.get('temp_bytes', 0))/1e9:.1f} GB/dev")
+        print(f"  collectives: {rep.get('collective_bytes')}")
+        return
+
+    import jax.numpy as jnp
+    from repro.configs import smoke_config
+    from repro.data.pipeline import KeyedDataPipeline, zipf_sources
+    from repro.train.optimizer import OptConfig
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    cfg = smoke_config(arch)
+    pipe = KeyedDataPipeline(zipf_sources(32, z=1.0), n_workers=1,
+                             seq_len=args.seq, vocab=cfg.vocab)
+
+    def data_fn(step):
+        while True:
+            pipe.run_interval(n_docs=32)
+            b = pipe.worker_batch(0, args.batch)
+            if b is not None:
+                out = {k: jnp.asarray(v) for k, v in b.items()}
+                if cfg.frontend == "vision_stub":
+                    import numpy as np
+                    out["pixel_embeds"] = jnp.asarray(
+                        np.random.default_rng(step).standard_normal(
+                            (args.batch, cfg.prefix_len, cfg.d_model)),
+                        jnp.bfloat16)
+                elif cfg.frontend == "audio_stub":
+                    import numpy as np
+                    out["frames"] = jnp.asarray(
+                        np.random.default_rng(step).standard_normal(
+                            (args.batch, cfg.encoder_seq, cfg.d_model)),
+                        jnp.bfloat16)
+                return out
+
+    tcfg = TrainerConfig(total_steps=args.steps, checkpoint_every=10,
+                         microbatches=args.microbatches or 1,
+                         skewshield=cfg.moe_experts > 0)
+    tr = Trainer(cfg, OptConfig(lr=1e-3, warmup_steps=5,
+                                total_steps=args.steps),
+                 tcfg, args.ckpt, data_fn)
+    if tr.try_resume():
+        print(f"resumed at step {tr.step}")
+    hist = tr.run()
+    print(f"{arch}: step {tr.step} loss "
+          f"{hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

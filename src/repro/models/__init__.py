@@ -1,0 +1,12 @@
+"""Model zoo: composable transformer/hybrid LMs for the assigned archs."""
+
+from .config import ModelConfig, ShapeConfig, SHAPES
+from . import schema
+from .transformer import (cache_schema, decoder_apply, forward, init_cache,
+                          lm_loss, logits_from_hidden, model_schema)
+
+__all__ = [
+    "ModelConfig", "ShapeConfig", "SHAPES", "schema", "cache_schema",
+    "decoder_apply", "forward", "init_cache", "lm_loss",
+    "logits_from_hidden", "model_schema",
+]

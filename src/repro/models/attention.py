@@ -1,0 +1,225 @@
+"""GQA attention with RoPE, sliding windows, KV cache, and optional Pallas
+flash path. The KV cache is stored flattened (B, S_max, Hkv*Dh) so the last
+dim shards over the model axis even when Hkv < mesh model size (the per-arch
+divisibility table lives in DESIGN.md)."""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import attention as flash_attention
+from repro.sharding.ctx import constrain
+
+from .config import ModelConfig
+from .layers import rope
+from .schema import ParamSpec
+
+NEG_INF = -1e30
+
+# probe mode: unroll the query-chunk scan so XLA's (loop-blind) cost analysis
+# counts every chunk — set by the dry-run probes, not by user code.
+_UNROLL_CHUNKS = contextvars.ContextVar("attn_unroll_chunks", default=False)
+
+
+def _attn_shard_pin() -> bool:
+    import os
+    return os.environ.get("REPRO_PERF_ATTN_SHARD", "0") == "1"
+
+
+@contextlib.contextmanager
+def unrolled_chunks():
+    tok = _UNROLL_CHUNKS.set(True)
+    try:
+        yield
+    finally:
+        _UNROLL_CHUNKS.reset(tok)
+
+
+def attn_schema(cfg: ModelConfig, stack=(), cross: bool = False):
+    st = tuple(["stack"] * len(stack))
+    d, hq, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    sch = {
+        "wq": ParamSpec(stack + (d, hq * dh), st + ("embed", "q_heads")),
+        "wk": ParamSpec(stack + (d, hkv * dh), st + ("embed", "kv_flat")),
+        "wv": ParamSpec(stack + (d, hkv * dh), st + ("embed", "kv_flat")),
+        "wo": ParamSpec(stack + (hq * dh, d), st + ("q_heads", "embed")),
+    }
+    if cfg.qkv_bias and not cross:
+        sch["bq"] = ParamSpec(stack + (hq * dh,), st + ("q_heads",), init="zeros")
+        sch["bk"] = ParamSpec(stack + (hkv * dh,), st + ("kv_flat",), init="zeros")
+        sch["bv"] = ParamSpec(stack + (hkv * dh,), st + ("kv_flat",), init="zeros")
+    return sch
+
+
+def _split_heads(x, n, dh):
+    b, t, _ = x.shape
+    return x.reshape(b, t, n, dh)
+
+
+def _attention_block(q, k, v, *, causal: bool, window: int, q_positions,
+                     kv_valid_len) -> jax.Array:
+    """jnp attention (B,H,T,Dh) x (B,Hkv,S,Dh); GQA via reshape-grouping."""
+    b, hq, t, dh = q.shape
+    hkv, s = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, t, dh)
+    logits = jnp.einsum("bkgtd,bksd->bkgts", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * (dh ** -0.5)
+    k_pos = jnp.arange(s)[None, :]
+    q_pos = q_positions[:, :, None] if q_positions.ndim == 2 else \
+        q_positions[None, :, None]
+    mask = jnp.broadcast_to(k_pos[None] < kv_valid_len, (b, t, s)) \
+        if kv_valid_len is not None else jnp.ones((1, t, s), bool)
+    if causal:
+        mask = mask & (k_pos[None] <= q_pos)
+    if window > 0:
+        mask = mask & (k_pos[None] > q_pos - window)
+    logits = jnp.where(mask[:, None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgts,bksd->bkgtd", probs, v.astype(jnp.float32))
+    return out.reshape(b, hq, t, dh).astype(q.dtype)
+
+
+_CHUNK_ELEMS = 2 ** 21        # materialize at most ~2M (T x S) scores / head
+
+
+def _xla_attention(q, k, v, *, causal: bool, window: int, q_positions,
+                   kv_valid_len) -> jax.Array:
+    """Query-chunked attention: never materializes the full (T, S) score
+    matrix (the standard pre-flash memory fix; the Pallas kernel replaces it
+    on real TPU). Chunks run as a scan — unrolled under probe mode so the
+    dry-run cost analysis counts every chunk."""
+    t = q.shape[2]
+    s = k.shape[2]
+    import os
+    window_slice = (os.environ.get("REPRO_PERF_WINDOW_SLICE", "0") == "1"
+                    and causal and window > 0 and kv_valid_len is None
+                    and t == s)
+    # probe mode: a single block counts identical FLOPs with far fewer HLO
+    # ops (dry-run compiles are abstract — no memory is actually allocated).
+    # The window-slice path changes the FLOPs themselves, so it must NOT be
+    # short-circuited in probe mode.
+    probe_skip = (_UNROLL_CHUNKS.get()
+                  and os.environ.get("REPRO_PROBE_CHUNKED", "0") != "1")
+    if not window_slice and (t * s <= _CHUNK_ELEMS or t <= 128
+                             or probe_skip):
+        return _attention_block(q, k, v, causal=causal, window=window,
+                                q_positions=q_positions,
+                                kv_valid_len=kv_valid_len)
+    chunk = max(128, _CHUNK_ELEMS // s)
+    chunk = min(chunk, t)
+    while t % chunk:
+        chunk -= 1
+    nc = t // chunk
+    q_c = q.reshape(q.shape[0], q.shape[1], nc, chunk,
+                    q.shape[3]).transpose(2, 0, 1, 3, 4)
+    if q_positions.ndim == 1:
+        pos_c = q_positions.reshape(nc, chunk)
+    else:
+        pos_c = q_positions.reshape(q_positions.shape[0], nc,
+                                    chunk).transpose(1, 0, 2)
+
+    # perf (flag-gated): sliding-window layers only need the KV band
+    # [chunk_start - window, chunk_end) — slice it instead of scanning all S
+    # (gemma3: 5/6 of layers are window=1024 -> ~S/(chunk+window) fewer
+    # bytes and FLOPs on the attention path).
+    band = window_slice and window + chunk < s
+    if band:
+        band_len = window + chunk
+
+        def one_band(_, xs):
+            qc, pc, i = xs
+            start = jnp.clip(i * chunk - window, 0, s - band_len)
+            kb = jax.lax.dynamic_slice_in_dim(k, start, band_len, axis=2)
+            vb = jax.lax.dynamic_slice_in_dim(v, start, band_len, axis=2)
+            out = _attention_block(qc, kb, vb, causal=causal, window=window,
+                                   q_positions=pc - start, kv_valid_len=None)
+            return None, out
+
+        unroll = nc if _UNROLL_CHUNKS.get() else 1
+        _, outs = jax.lax.scan(one_band, None,
+                               (q_c, pos_c, jnp.arange(nc)), unroll=unroll)
+        return outs.transpose(1, 2, 0, 3, 4).reshape(q.shape)
+
+    def one(_, xs):
+        qc, pc = xs
+        out = _attention_block(qc, k, v, causal=causal, window=window,
+                               q_positions=pc, kv_valid_len=kv_valid_len)
+        return None, out
+
+    unroll = nc if _UNROLL_CHUNKS.get() else 1
+    _, outs = jax.lax.scan(one, None, (q_c, pos_c), unroll=unroll)
+    return outs.transpose(1, 2, 0, 3, 4).reshape(q.shape)
+
+
+def attn(p, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
+         window: int = 0, causal: bool = True,
+         cache: Optional[dict] = None, cache_index=None,
+         kv_source: Optional[jax.Array] = None, use_rope: bool = True,
+         use_flash: bool = False) -> Tuple[jax.Array, Optional[dict]]:
+    """Self- or cross-attention.
+
+    cache: {"k": (B, S_max, Hkv*Dh), "v": ...} — decode writes this step's
+    K/V at ``cache_index`` and attends over [0, cache_index].
+    kv_source: encoder output for cross-attention (no cache, no causal).
+    """
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    b, t, _ = x.shape
+    src = x if kv_source is None else kv_source
+    q = jnp.einsum("btd,dh->bth", x, p["wq"])
+    k = jnp.einsum("btd,dh->bth", src, p["wk"])
+    v = jnp.einsum("btd,dh->bth", src, p["wv"])
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    qh = _split_heads(q, hq, dh)
+    kh = _split_heads(k, hkv, dh)
+    if use_rope and kv_source is None:
+        qh = rope(qh, positions, cfg.rope_theta)
+        kh = rope(kh, positions, cfg.rope_theta)
+    k = kh.reshape(b, -1, hkv * dh)
+
+    new_cache = None
+    if cache is not None:
+        # decode: write this step's K/V at cache_index, attend over the cache
+        idx = cache_index
+        ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, idx, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, idx, 0))
+        new_cache = {"k": ck, "v": cv}
+        k_full = ck.reshape(b, -1, hkv, dh).transpose(0, 2, 1, 3)
+        v_full = cv.reshape(b, -1, hkv, dh).transpose(0, 2, 1, 3)
+        # pin head-dim sharding: when heads % model-axis != 0 the partitioner
+        # otherwise shards head_dim and all-reduces the logits (§Perf 1.3b);
+        # constrain() auto-falls-back to replication for indivisible heads.
+        # Flag-gated: a clear win for indivisible-head archs (granite-moe:
+        # collective −35%), mildly harmful where heads already shard cleanly
+        # (gemma3: +34% collective) — enabled per-arch by the launcher.
+        qt = qh.transpose(0, 2, 1, 3)
+        if _attn_shard_pin():
+            qt = constrain(qt, "dp", "tp", None, None)
+            k_full = constrain(k_full, "dp", "tp", None, None)
+            v_full = constrain(v_full, "dp", "tp", None, None)
+        out = _xla_attention(qt, k_full, v_full,
+                             causal=True, window=window,
+                             q_positions=positions, kv_valid_len=idx + t)
+    else:
+        k_full = kh.transpose(0, 2, 1, 3)
+        v_full = _split_heads(v, hkv, dh).transpose(0, 2, 1, 3)
+        qt = qh.transpose(0, 2, 1, 3)
+        if _attn_shard_pin():
+            k_full = constrain(k_full, "dp", "tp", None, None)
+            v_full = constrain(v_full, "dp", "tp", None, None)
+            qt = constrain(qt, "dp", "tp", None, None)
+        if use_flash and causal and kv_source is None:
+            out = flash_attention(qt, k_full, v_full, causal=True,
+                                  window=window)
+        else:
+            out = _xla_attention(qt, k_full, v_full, causal=causal,
+                                 window=window, q_positions=positions,
+                                 kv_valid_len=None)
+    out = out.transpose(0, 2, 1, 3).reshape(b, t, hq * dh)
+    return jnp.einsum("bth,hd->btd", out, p["wo"]), new_cache

@@ -1,0 +1,78 @@
+"""Shared building blocks: RMSNorm, RoPE, gated MLP, embeddings."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .schema import ParamSpec
+
+
+# ------------------------------------------------------------------ norm --
+def rmsnorm_schema(d: int, stack=()):
+    return {"scale": ParamSpec(stack + (d,), tuple(["stack"] * len(stack)) +
+                               ("embed",), init="ones", dtype=jnp.float32)}
+
+
+def rmsnorm(p, x, eps: float = 1e-6):
+    h = x.astype(jnp.float32)
+    var = jnp.mean(h * h, axis=-1, keepdims=True)
+    return (h * jax.lax.rsqrt(var + eps) * p["scale"]).astype(x.dtype)
+
+
+# ------------------------------------------------------------------ rope --
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, T, H, Dh) with positions (B, T) or (T,)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, T, half)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------- mlp --
+def mlp_schema(cfg: ModelConfig, stack=()):
+    st = tuple(["stack"] * len(stack))
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "w_gate": ParamSpec(stack + (d, f), st + ("embed", "mlp")),
+        "w_up": ParamSpec(stack + (d, f), st + ("embed", "mlp")),
+        "w_down": ParamSpec(stack + (f, d), st + ("mlp", "embed")),
+    }
+
+
+def mlp(p, x):
+    """SwiGLU feed-forward."""
+    gate = jax.nn.silu(jnp.einsum("btd,df->btf", x, p["w_gate"]))
+    up = jnp.einsum("btd,df->btf", x, p["w_up"])
+    return jnp.einsum("btf,fd->btd", gate * up, p["w_down"])
+
+
+# ------------------------------------------------------------- embedding --
+def embed_schema(cfg: ModelConfig):
+    return {
+        # 1/sqrt(d) init: harmless for the forward pass (RMSNorm follows) and
+        # keeps tied-unembedding logits at unit scale.
+        "tokens": ParamSpec((cfg.vocab_padded, cfg.d_model),
+                            ("vocab", "embed"), scale=cfg.d_model ** -0.5),
+    }
+
+
+def unembed_schema(cfg: ModelConfig):
+    return {"w": ParamSpec((cfg.d_model, cfg.vocab_padded),
+                           ("embed", "vocab"))}
+
+
+def embed(p, tokens):
+    return jnp.take(p["tokens"], tokens, axis=0)
+
+
+def unembed(p, x):
+    return jnp.einsum("btd,dv->btv", x, p["w"])

@@ -1,0 +1,135 @@
+"""Mamba (S6) block for the jamba hybrid — chunked parallel scan for TPU.
+
+Hardware adaptation: the CUDA selective-scan kernel keeps state in SRAM
+across a sequential sweep. On TPU we chunk time into CH-step blocks, run
+``jax.lax.associative_scan`` *within* a chunk (VMEM-sized transient:
+B x CH x D_in x N), and carry the (B, D_in, N) state *across* chunks with a
+short sequential scan of length T/CH — MXU-dense inside, O(T/CH) serial
+steps outside. Decode consumes/updates the carried state in O(1).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .schema import ParamSpec
+
+
+def mamba_schema(cfg: ModelConfig, stack=()):
+    st = tuple(["stack"] * len(stack))
+    d = cfg.d_model
+    di = cfg.mamba_expand * d
+    n = cfg.mamba_d_state
+    dc = cfg.mamba_d_conv
+    dt_rank = max(1, d // 16)
+    return {
+        "in_proj": ParamSpec(stack + (d, 2 * di), st + ("embed", "mamba_inner")),
+        "conv_w": ParamSpec(stack + (dc, di), st + ("conv", "mamba_inner"),
+                            scale=0.5),
+        "conv_b": ParamSpec(stack + (di,), st + ("mamba_inner",), init="zeros"),
+        "x_proj": ParamSpec(stack + (di, dt_rank + 2 * n),
+                            st + ("mamba_inner", None)),
+        "dt_proj": ParamSpec(stack + (dt_rank, di), st + (None, "mamba_inner"),
+                             scale=0.1),
+        "dt_bias": ParamSpec(stack + (di,), st + ("mamba_inner",), init="zeros"),
+        "a_log": ParamSpec(stack + (di, n), st + ("mamba_inner", None),
+                           init="ones", dtype=jnp.float32),
+        "d_skip": ParamSpec(stack + (di,), st + ("mamba_inner",), init="ones",
+                            dtype=jnp.float32),
+        "out_proj": ParamSpec(stack + (di, d), st + ("mamba_inner", "embed")),
+    }
+
+
+def _ssm_scan_chunked(a, bx, h0, chunk: int):
+    """h_t = a_t * h_{t-1} + bx_t over time, chunked associative scan.
+
+    a, bx: (B, T, Di, N); h0: (B, Di, N). Returns (h_all (B,T,Di,N), h_T).
+    """
+    b, t, di, n = a.shape
+    assert t % chunk == 0, (t, chunk)
+    nc = t // chunk
+    a_c = a.reshape(b, nc, chunk, di, n)
+    bx_c = bx.reshape(b, nc, chunk, di, n)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, br + ar * bl
+
+    # within-chunk prefix (parallel, VMEM-sized transient)
+    a_pref, bx_pref = jax.lax.associative_scan(combine, (a_c, bx_c), axis=2)
+
+    # across-chunk carry (sequential, length T/chunk)
+    def step(h, inputs):
+        a_last, bx_last, a_all, bx_all = inputs
+        h_all = a_all * h[:, None] + bx_all          # (B, chunk, Di, N)
+        h_next = a_last * h + bx_last
+        return h_next, h_all
+
+    carry_in = (a_pref[:, :, -1], bx_pref[:, :, -1], a_pref, bx_pref)
+    carry_in = jax.tree.map(lambda x: jnp.moveaxis(x, 1, 0), carry_in)
+    h_t, h_all = jax.lax.scan(step, h0, carry_in)
+    h_all = jnp.moveaxis(h_all, 0, 1).reshape(b, t, di, n)
+    return h_all, h_t
+
+
+def mamba(p, cfg: ModelConfig, x: jax.Array,
+          state: Optional[dict] = None, chunk: int = 256
+          ) -> Tuple[jax.Array, Optional[dict]]:
+    """x: (B, T, D). state (decode): {"h": (B, Di, N), "conv": (B, dc-1, Di)}.
+
+    Training/prefill: state=None, full-sequence chunked scan.
+    Decode: T small (usually 1); sequential update from carried state.
+    """
+    b, t, d = x.shape
+    di = cfg.mamba_expand * d
+    n = cfg.mamba_d_state
+    dc = cfg.mamba_d_conv
+    dt_rank = max(1, d // 16)
+
+    xz = jnp.einsum("btd,de->bte", x, p["in_proj"])
+    xs, z = jnp.split(xz, 2, axis=-1)                      # (B, T, Di) each
+
+    # causal depthwise conv over time
+    if state is not None:
+        conv_in = jnp.concatenate([state["conv"], xs], axis=1)  # (B, dc-1+T, Di)
+        new_conv = conv_in[:, -(dc - 1):, :]
+    else:
+        conv_in = jnp.pad(xs, ((0, 0), (dc - 1, 0), (0, 0)))
+        new_conv = conv_in[:, -(dc - 1):, :]
+    windows = jnp.stack([conv_in[:, i:i + t, :] for i in range(dc)], axis=2)
+    xs = jnp.einsum("btcd,cd->btd", windows, p["conv_w"]) + p["conv_b"]
+    xs = jax.nn.silu(xs)
+
+    proj = jnp.einsum("btd,dp->btp", xs, p["x_proj"])
+    dt_low, b_in, c_in = jnp.split(proj, [dt_rank, dt_rank + n], axis=-1)
+    dt = jax.nn.softplus(jnp.einsum("btr,rd->btd", dt_low, p["dt_proj"])
+                         + p["dt_bias"])                   # (B, T, Di)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))           # (Di, N)
+    # discretize: a_bar = exp(dt * A); b_bar x = dt * B * x
+    a_bar = jnp.exp(dt.astype(jnp.float32)[..., None] * a)         # (B,T,Di,N)
+    bx = (dt.astype(jnp.float32) * xs.astype(jnp.float32))[..., None] * \
+        b_in.astype(jnp.float32)[:, :, None, :]                    # (B,T,Di,N)
+
+    h0 = state["h"] if state is not None else jnp.zeros((b, di, n), jnp.float32)
+    if t == 1:
+        h_t = a_bar[:, 0] * h0 + bx[:, 0]
+        h_all = h_t[:, None]
+    else:
+        c = min(chunk, t)
+        while t % c:                      # largest divisor of t that is <= chunk
+            c -= 1
+        h_all, h_t = _ssm_scan_chunked(a_bar, bx, h0, c)
+
+    y = jnp.einsum("btdn,btn->btd", h_all,
+                   c_in.astype(jnp.float32))               # (B, T, Di)
+    y = y + p["d_skip"] * xs.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = jnp.einsum("btd,de->bte", y, p["out_proj"])
+    # state is always returned: prefill hands it to the decode loop; the
+    # training step simply drops it.
+    return out, {"h": h_t, "conv": new_conv}

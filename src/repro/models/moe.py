@@ -1,0 +1,163 @@
+"""Mixture-of-Experts layer with SkewShield expert placement.
+
+Dispatch is sort-based with static capacity (TPU-friendly: gathers + dense
+batched GEMMs, no dynamic shapes):
+
+  1. router top-k over logical experts;
+  2. **SkewShield** (the paper's technique): logical expert ids are remapped
+     through a ``placement`` vector — the mixed routing function F(e) of
+     paper Eq. 1 materialized as an array. The balancer (repro.core) updates
+     it between steps from measured expert loads; being a jit *argument*, a
+     new placement never triggers recompilation;
+  3. flat (token, slot) pairs sorted by physical expert; rank-in-expert via
+     a searchsorted prefix; entries past capacity are dropped (classic
+     capacity-factor semantics — imbalance becomes token drops, which is
+     exactly the failure mode SkewShield minimizes);
+  4. gather tokens into an (E, cap, D) buffer sharded over the model axis
+     (EP), run the expert FFNs as batched GEMMs, gather back per (token,
+     slot) and combine with gate weights. No scatter touches the D-wide
+     data path.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.ctx import constrain
+
+from .config import ModelConfig
+from .schema import ParamSpec
+
+
+def moe_schema(cfg: ModelConfig, stack=()):
+    st = tuple(["stack"] * len(stack))
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.moe_experts
+    return {
+        "router": ParamSpec(stack + (d, e), st + ("embed", None),
+                            dtype=jnp.float32),
+        "w_gate": ParamSpec(stack + (e, d, f), st + ("expert", "embed", "mlp")),
+        "w_up": ParamSpec(stack + (e, d, f), st + ("expert", "embed", "mlp")),
+        "w_down": ParamSpec(stack + (e, f, d), st + ("expert", "mlp", "embed")),
+    }
+
+
+def capacity_for(n_tokens: int, cfg: ModelConfig) -> int:
+    cap = int(math.ceil(n_tokens * cfg.moe_topk * cfg.moe_capacity_factor
+                        / cfg.moe_experts))
+    return max(8, ((cap + 7) // 8) * 8)
+
+
+def _dispatch_groups(n_tokens: int) -> int:
+    """Dispatch-group count = DP degree of the installed mesh (perf: sort and
+    rank stay *local* to each data shard; a single global argsort over N*k
+    elements otherwise forces a cross-mesh sort network). 1 when unsharded.
+
+    Gated behind REPRO_PERF_MOE_GROUPED so the paper-faithful baseline stays
+    reproducible; hillclimb runs (and production configs) enable it.
+    """
+    import os
+    if os.environ.get("REPRO_PERF_MOE_GROUPED", "0") != "1":
+        return 1
+    from repro.sharding.ctx import current_mesh
+    mesh = current_mesh()
+    if mesh is None:
+        return 1
+    import numpy as np
+    g = int(np.prod([mesh.shape[a] for a in ("pod", "data")
+                     if a in mesh.axis_names]))
+    return g if n_tokens % g == 0 else 1
+
+
+def moe(p, cfg: ModelConfig, x: jax.Array,
+        placement: Optional[jax.Array] = None,
+        return_stats: bool = False):
+    """x: (B, T, D) -> (B, T, D) [, per-expert load (E,)].
+
+    placement: (E,) int32 — physical slot of each logical expert (SkewShield
+    F(e); identity = paper's pure-hash baseline).
+
+    Dispatch is group-wise: tokens are split into G groups aligned with the
+    DP shards; sort, rank and capacity are per (group, expert) — the
+    standard EP formulation (local capacity) whose only cross-shard traffic
+    is the (G, E, cap_g, D) buffer: an all-to-all between the data and model
+    axes, O(tokens x D) bytes.
+    """
+    b, t, d = x.shape
+    e, k = cfg.moe_experts, cfg.moe_topk
+    n = b * t
+    g = _dispatch_groups(n)
+    ng = n // g                                            # tokens per group
+    cap = capacity_for(ng, cfg)                            # per-group capacity
+    xf = x.reshape(g, ng, d)
+    xf = constrain(xf, "dp", None, None)
+
+    gates = jnp.einsum("gnd,de->gne", xf.astype(jnp.float32), p["router"])
+    top_vals, top_idx = jax.lax.top_k(gates, k)            # (G, Ng, k)
+    weights = jax.nn.softmax(top_vals, axis=-1)
+
+    flat_logical = top_idx.reshape(g, ng * k)
+    if placement is not None:
+        flat_e = placement[flat_logical]                   # SkewShield F(e)
+    else:
+        flat_e = flat_logical
+
+    order = jnp.argsort(flat_e, axis=-1, stable=True)      # (G, Ng*k) local
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=-1)
+    starts = jax.vmap(lambda se: jnp.searchsorted(se, jnp.arange(e)))(sorted_e)
+    rank_sorted = jnp.arange(ng * k)[None] - \
+        jnp.take_along_axis(starts, sorted_e, axis=-1)
+    keep_sorted = rank_sorted < cap
+
+    # (G, E*cap) dispatch buffer of local token indices; Ng = sentinel
+    slot = sorted_e * cap + jnp.minimum(rank_sorted, cap - 1)
+    tok_sorted = order // k
+    dispatch = jnp.full((g, e * cap), ng, jnp.int32)
+    dispatch = jax.vmap(
+        lambda dsp, sl, val: dsp.at[sl].set(val, mode="drop"))(
+        dispatch, slot,
+        jnp.where(keep_sorted, tok_sorted, ng).astype(jnp.int32))
+    x_pad = jnp.concatenate([xf, jnp.zeros((g, 1, d), xf.dtype)], axis=1)
+    xs = jnp.take_along_axis(x_pad, dispatch[..., None], axis=1)
+    xs = xs.reshape(g, e, cap, d)
+    # EP boundary: (G, E, cap, D) sharded (dp, model) -> all-to-all here
+    xs = constrain(xs, "dp", "tp", None, None)
+
+    gate_h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xs, p["w_gate"]))
+    up_h = jnp.einsum("gecd,edf->gecf", xs, p["w_up"])
+    ys = jnp.einsum("gecf,efd->gecd", gate_h * up_h, p["w_down"])
+    ys = constrain(ys, "dp", "tp", None, None)
+    ys_flat = ys.reshape(g, e * cap, d)
+
+    # combine: per (token, slot) gather its expert output back (local)
+    rank_of = jax.vmap(lambda o, r: jnp.zeros((ng * k,), jnp.int32)
+                       .at[o].set(r.astype(jnp.int32)))(order, rank_sorted)
+    keep_of = jax.vmap(lambda o, kp: jnp.zeros((ng * k,), bool)
+                       .at[o].set(kp))(order, keep_sorted)
+    src = flat_e * cap + jnp.minimum(rank_of, cap - 1)
+    # NB: the zero literal must carry ys' dtype — a float 0.0 weak-promotes
+    # the whole combine (and its backward all-reduces) to f32 (§Perf 1.3).
+    y_tok = jnp.where(keep_of[..., None],
+                      jnp.take_along_axis(ys_flat, src[..., None], axis=1),
+                      jnp.zeros((), ys_flat.dtype))         # (G, Ng*k, D)
+    out = jnp.sum(y_tok.reshape(g, ng, k, d) *
+                  weights[..., None].astype(y_tok.dtype), axis=2)
+    out = constrain(out, "dp", None, None).reshape(b, t, d)
+    if return_stats:
+        load = jnp.zeros((e,), jnp.float32).at[flat_e.reshape(-1)].add(1.0)
+        dropped = jnp.sum(~keep_sorted)
+        return out, {"expert_load": load, "dropped": dropped}
+    return out
+
+
+def aux_load_balance_loss(gates_softmax: jax.Array, top_idx: jax.Array,
+                          e: int) -> jax.Array:
+    """Switch-style auxiliary loss (the *long-term* fix the paper contrasts
+    with; kept for completeness/ablation)."""
+    me = jnp.mean(gates_softmax, axis=0)
+    ce = jnp.zeros((e,)).at[top_idx.reshape(-1)].add(1.0)
+    ce = ce / jnp.maximum(jnp.sum(ce), 1.0)
+    return e * jnp.sum(me * ce)

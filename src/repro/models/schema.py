@@ -1,0 +1,135 @@
+"""Declarative parameter schemas.
+
+Every model builds a pytree of :class:`ParamSpec` (pure function of config);
+the same schema then serves three consumers without drift:
+
+* ``init(schema, rng)``          -> materialized params (random init)
+* ``shardings(schema, mesh, rules)`` -> NamedSharding tree (logical axes ->
+  mesh axes, with automatic divisibility fallback to replication)
+* ``abstract(schema)``           -> ShapeDtypeStruct tree (dry-run, no alloc)
+
+Logical axis names used across the zoo:
+  embed (d_model), vocab, q_heads (flattened heads*head_dim), kv_flat
+  (flattened kv_heads*head_dim), mlp (d_ff), expert, mamba_inner, conv,
+  stack (scan-stacked layer dim), none (replicated).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]        # logical axis name per dim
+    dtype: jnp.dtype = jnp.bfloat16
+    init: str = "normal"                   # normal | zeros | ones
+    scale: Optional[float] = None          # None -> 1/sqrt(fan_in)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _materialize(spec: ParamSpec, key) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    fan_in = spec.shape[0] if len(spec.shape) > 1 else max(spec.shape[-1], 1)
+    scale = spec.scale if spec.scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, spec.shape, jnp.float32) * scale).astype(
+        spec.dtype)
+
+
+def init(schema, rng) -> dict:
+    leaves, treedef = jax.tree.flatten(
+        schema, is_leaf=lambda x: isinstance(x, ParamSpec))
+    keys = jax.random.split(rng, len(leaves))
+    vals = [_materialize(spec, k) for spec, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract(schema) -> dict:
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), schema,
+        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+# default logical-axis -> mesh-axis rules (the TP/EP mapping)
+DEFAULT_RULES = {
+    "vocab": "model",
+    "q_heads": "model",
+    "kv_flat": "model",
+    "mlp": "model",
+    "expert": "model",
+    "mamba_inner": "model",
+    "heads": "model",
+    "embed": None,            # d_model replicated (TP on the other operand)
+    "stack": None,
+    "conv": None,
+    None: None,
+}
+
+
+def spec_for(spec: ParamSpec, mesh: Mesh, rules=None) -> P:
+    """Logical axes -> PartitionSpec with divisibility fallback.
+
+    A dim only shards if its size divides the mesh axis product; otherwise it
+    falls back to replication (the pragmatic choice for e.g. qwen2's 28 heads
+    on a 16-way model axis — recorded by callers for the roofline report).
+    """
+    rules = {**DEFAULT_RULES, **(rules or {})}
+    out, used = [], set()
+    for size, axis in zip(spec.shape, spec.axes):
+        mesh_axis = rules.get(axis)
+        if mesh_axis is None or mesh_axis in used:
+            out.append(None)
+            continue
+        ax_size = int(np.prod([mesh.shape[a] for a in (
+            mesh_axis if isinstance(mesh_axis, tuple) else (mesh_axis,))]))
+        if size % ax_size == 0:
+            out.append(mesh_axis)
+            used.add(mesh_axis)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def shardings(schema, mesh: Mesh, rules=None):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, spec_for(s, mesh, rules)), schema,
+        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def partition_specs(schema, mesh: Mesh, rules=None):
+    return jax.tree.map(
+        lambda s: spec_for(s, mesh, rules), schema,
+        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def count_params(schema) -> int:
+    leaves = jax.tree.leaves(schema, is_leaf=lambda x: isinstance(x, ParamSpec))
+    return int(sum(math.prod(s.shape) for s in leaves))
+
+
+def replication_report(schema, mesh: Mesh, rules=None) -> dict:
+    """Which logical axes failed divisibility and got replicated (roofline)."""
+    report = {}
+
+    def visit(path, s):
+        ps = spec_for(s, mesh, rules)
+        for size, logical, assigned in zip(s.shape, s.axes, ps):
+            if logical not in (None, "stack", "embed", "conv") and assigned is None:
+                report.setdefault(logical, set()).add(size)
+
+    jax.tree_util.tree_map_with_path(visit, schema,
+                                     is_leaf=lambda x: isinstance(x, ParamSpec))
+    return {k: sorted(v) for k, v in report.items()}

@@ -1,0 +1,180 @@
+"""SkewShield: the paper's dynamic key-based partitioning applied to
+mixture-of-experts placement.
+
+Mapping (DESIGN.md §2): logical experts = keys; EP shards = task instances;
+static placement h(e) = e // (E / n_shards) (contiguous blocks) = the hash
+baseline; the routing table = per-expert overrides; state = expert weights
+(+ optimizer moments) so migration cost = bytes of experts moved between
+shards. The controller runs the Mixed algorithm on measured expert loads at
+step/interval boundaries; because the resulting placement is a jit *argument*
+(an (E,) int32 permutation), installing a new plan never recompiles — the
+paper's Pause/Resume collapses to a step-boundary swap plus one sharded
+gather that XLA lowers to a collective-permute of the moved experts only.
+
+Slot-count constraint: an (E,) permutation requires every shard to hold
+exactly E/S slots, so after the balancer's load-driven plan a count-repair
+pass moves the lightest surplus experts to shards with free slots (the
+balancer optimizes load; slots are a layout constraint it doesn't know).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (Assignment, BalanceConfig, KeyStats,
+                        RebalanceController)
+from repro.core.balancer import metrics
+from repro.core.balancer.types import HashRouter
+
+
+class BlockRouter(HashRouter):
+    """h(e) = e // (E / n_shards): the static contiguous expert layout."""
+
+    def __init__(self, n_experts: int, n_shards: int):
+        assert n_experts % n_shards == 0
+        self.n_experts = n_experts
+        self.n_dest = n_shards
+        self.per_shard = n_experts // n_shards
+
+    def __call__(self, keys: np.ndarray) -> np.ndarray:
+        return (np.asarray(keys, np.int64) // self.per_shard)
+
+    def with_n_dest(self, n_dest: int) -> "BlockRouter":
+        return BlockRouter(self.n_experts, n_dest)
+
+
+@dataclasses.dataclass
+class PlacementUpdate:
+    placement: np.ndarray          # (E,) logical expert -> physical slot
+    moved_experts: np.ndarray      # logical ids whose shard changed
+    migration_bytes: float
+    theta_before: float
+    theta_after: float
+    plan_time_s: float
+
+
+class SkewShieldPlacer:
+    """One placer per MoE layer (or shared, if loads are aggregated)."""
+
+    def __init__(self, n_experts: int, n_shards: int,
+                 bytes_per_expert: float,
+                 theta_max: float = 0.1, table_max: Optional[int] = None,
+                 algorithm: str = "mixed", beta: float = 1.5):
+        self.e = n_experts
+        self.s = n_shards
+        self.per_shard = n_experts // n_shards
+        self.bytes_per_expert = bytes_per_expert
+        cfg = BalanceConfig(theta_max=theta_max,
+                            table_max=table_max if table_max is not None
+                            else max(4, n_experts // 2),
+                            beta=beta)
+        self.controller = RebalanceController(
+            Assignment(BlockRouter(n_experts, n_shards)), cfg,
+            algorithm=algorithm)
+        self.placement = np.arange(n_experts, dtype=np.int32)  # identity
+
+    # ------------------------------------------------------------------ plan
+    def shard_of_slot(self, slot: np.ndarray) -> np.ndarray:
+        return np.asarray(slot) // self.per_shard
+
+    def current_shards(self) -> np.ndarray:
+        """shard of each logical expert under the current placement."""
+        return self.shard_of_slot(self.placement)
+
+    def update(self, expert_load: np.ndarray) -> PlacementUpdate:
+        """expert_load: (E,) measured tokens per *logical* expert."""
+        expert_load = np.asarray(expert_load, np.float64)
+        stats = KeyStats(keys=np.arange(self.e, dtype=np.int64),
+                         cost=np.maximum(expert_load, 0.0),
+                         mem=np.full((self.e,), self.bytes_per_expert))
+        shards_before = self.current_shards()
+        loads_before = np.bincount(shards_before, weights=expert_load,
+                                   minlength=self.s)
+        ev = self.controller.on_interval(stats)
+        if ev.result is None:                     # balanced already
+            return PlacementUpdate(self.placement.copy(),
+                                   np.zeros((0,), np.int64), 0.0,
+                                   metrics.theta(loads_before),
+                                   metrics.theta(loads_before), 0.0)
+        want = ev.result.assignment.dest(stats.keys)       # expert -> shard
+        want = self._repair_counts(want, expert_load)
+        placement = self._slots_from_shards(want)
+        moved = np.flatnonzero(self.shard_of_slot(placement)
+                               != shards_before)
+        loads_after = np.bincount(want, weights=expert_load, minlength=self.s)
+        upd = PlacementUpdate(
+            placement=placement, moved_experts=moved,
+            migration_bytes=float(len(moved)) * self.bytes_per_expert,
+            theta_before=metrics.theta(loads_before),
+            theta_after=metrics.theta(loads_after),
+            plan_time_s=ev.result.plan_time_s)
+        self.placement = placement
+        return upd
+
+    def _repair_counts(self, want: np.ndarray,
+                       load: np.ndarray) -> np.ndarray:
+        """Enforce exactly E/S experts per shard, moving lightest first."""
+        want = np.asarray(want, np.int64).copy()
+        counts = np.bincount(want, minlength=self.s)
+        over = [d for d in range(self.s) if counts[d] > self.per_shard]
+        under = [d for d in range(self.s) if counts[d] < self.per_shard]
+        for d in over:
+            members = np.flatnonzero(want == d)
+            members = members[np.argsort(load[members])]   # lightest first
+            i = 0
+            while counts[d] > self.per_shard and under:
+                tgt = under[0]
+                want[members[i]] = tgt
+                counts[d] -= 1
+                counts[tgt] += 1
+                if counts[tgt] == self.per_shard:
+                    under.pop(0)
+                i += 1
+        return want
+
+    def _slots_from_shards(self, want: np.ndarray) -> np.ndarray:
+        """Assign concrete slots, keeping unmoved experts in their old slot
+        (minimizes the physical permutation — fewer weights move)."""
+        placement = np.full((self.e,), -1, np.int32)
+        old_shards = self.current_shards()
+        free: Dict[int, List[int]] = {
+            d: list(range(d * self.per_shard, (d + 1) * self.per_shard))
+            for d in range(self.s)}
+        # unmoved experts keep their slots
+        for l in range(self.e):
+            if want[l] == old_shards[l]:
+                slot = int(self.placement[l])
+                placement[l] = slot
+                free[want[l]].remove(slot)
+        for l in range(self.e):
+            if placement[l] < 0:
+                placement[l] = free[int(want[l])].pop(0)
+        return placement
+
+
+def permute_expert_params(moe_params: dict, old_placement: np.ndarray,
+                          new_placement: np.ndarray) -> dict:
+    """Physically migrate expert weights to their new slots.
+
+    Weights are stored by physical slot; w_new[new[l]] = w_old[old[l]].
+    The gather over the (sharded) expert dim lowers to a collective-permute
+    touching only moved experts. Router weights are logical — untouched.
+    """
+    perm = np.empty_like(old_placement)
+    perm[new_placement] = old_placement          # slot_new -> slot_old
+    perm = jnp.asarray(perm, jnp.int32)
+    out = dict(moe_params)
+    for name in ("w_gate", "w_up", "w_down"):
+        w = moe_params[name]
+        out[name] = jnp.take(w, perm, axis=w.ndim - 3)
+    return out
+
+
+def placements_array(placers: List[SkewShieldPlacer]) -> jax.Array:
+    """(n_layers, E) placement matrix for forward(placements=...)."""
+    return jnp.asarray(np.stack([p.placement for p in placers]), jnp.int32)

@@ -1,0 +1,358 @@
+"""Composable LM assembler for all 10 assigned architectures.
+
+Layers are grouped into *superblocks* of ``cfg.layer_pattern`` length and
+scanned with stacked parameters (n_groups leading dim): one traced block body
+regardless of depth, which keeps dry-run HLO and compile time bounded for
+72-layer hybrids. Layer kinds inside a superblock: attn | mamba | slstm |
+mlstm, each optionally followed by a dense or MoE MLP.
+
+The same forward serves train (cache=None), prefill (cache + index=0, T=seq)
+and decode (cache + index=t, T=1) — the attention/SSM sublayers switch on the
+presence of a cache.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.ctx import constrain
+
+from . import attention as attn_mod
+from . import layers, mamba as mamba_mod, moe as moe_mod, xlstm as xlstm_mod
+from .config import ModelConfig
+from .schema import ParamSpec
+
+PyTree = Any
+
+
+# ------------------------------------------------------------------ schema --
+def _sub_schema(cfg: ModelConfig, j: int, n_groups: int, cross: bool):
+    kind = cfg.layer_pattern[j]
+    stack = (n_groups,)
+    sch: Dict[str, Any] = {"norm": layers.rmsnorm_schema(cfg.d_model, stack)}
+    if kind == "attn":
+        sch["attn"] = attn_mod.attn_schema(cfg, stack)
+    elif kind == "mamba":
+        sch["mamba"] = mamba_mod.mamba_schema(cfg, stack)
+    elif kind == "slstm":
+        sch["cell"] = xlstm_mod.slstm_schema(cfg, stack)
+    elif kind == "mlstm":
+        sch["cell"] = xlstm_mod.mlstm_schema(cfg, stack)
+    else:
+        raise ValueError(kind)
+    if cross:
+        sch["cross_norm"] = layers.rmsnorm_schema(cfg.d_model, stack)
+        sch["cross"] = attn_mod.attn_schema(cfg, stack, cross=True)
+    if cfg.d_ff > 0:
+        sch["mlp_norm"] = layers.rmsnorm_schema(cfg.d_model, stack)
+        if cfg.layer_is_moe(j):
+            sch["moe"] = moe_mod.moe_schema(cfg, stack)
+        else:
+            sch["mlp"] = layers.mlp_schema(cfg, stack)
+    return sch
+
+
+def _encoder_cfg(cfg: ModelConfig) -> ModelConfig:
+    return dataclasses.replace(
+        cfg, n_layers=cfg.encoder_layers, layer_pattern=("attn",),
+        window_pattern=(0,), moe_experts=0, qkv_bias=False)
+
+
+def model_schema(cfg: ModelConfig) -> PyTree:
+    cfg.validate()
+    period = cfg.pattern_period
+    n_groups = cfg.n_layers // period
+    cross = cfg.encoder_layers > 0
+    sch: Dict[str, Any] = {
+        "embed": layers.embed_schema(cfg),
+        "final_norm": layers.rmsnorm_schema(cfg.d_model),
+        "groups": {f"sub{j}": _sub_schema(cfg, j, n_groups, cross)
+                   for j in range(period)},
+    }
+    if not cfg.tie_embeddings:
+        sch["unembed"] = layers.unembed_schema(cfg)
+    if cross:
+        ecfg = _encoder_cfg(cfg)
+        sch["encoder"] = {
+            "groups": {"sub0": _sub_schema(ecfg, 0, ecfg.n_layers, False)},
+            "final_norm": layers.rmsnorm_schema(cfg.d_model),
+        }
+    return sch
+
+
+# ------------------------------------------------------------------- cache --
+def cache_schema(cfg: ModelConfig, batch: int, max_seq: int) -> PyTree:
+    """Decode-state pytree as ParamSpecs (dry-run friendly)."""
+    period = cfg.pattern_period
+    n_groups = cfg.n_layers // period
+    d, hkv, dh = cfg.d_model, cfg.n_kv_heads, cfg.hd
+    di = cfg.mamba_expand * d
+    h_heads = cfg.n_heads
+    dhead = d // max(h_heads, 1)
+    out = {}
+    for j in range(period):
+        kind = cfg.layer_pattern[j]
+        st = (n_groups,)
+        if kind == "attn":
+            out[f"sub{j}"] = {
+                "k": ParamSpec(st + (batch, max_seq, hkv * dh),
+                               ("stack", "batch", "kv_seq", "kv_flat"),
+                               init="zeros"),
+                "v": ParamSpec(st + (batch, max_seq, hkv * dh),
+                               ("stack", "batch", "kv_seq", "kv_flat"),
+                               init="zeros"),
+            }
+        elif kind == "mamba":
+            out[f"sub{j}"] = {
+                "h": ParamSpec(st + (batch, di, cfg.mamba_d_state),
+                               ("stack", "batch", "mamba_inner", None),
+                               init="zeros", dtype=jnp.float32),
+                "conv": ParamSpec(st + (batch, cfg.mamba_d_conv - 1, di),
+                                  ("stack", "batch", None, "mamba_inner"),
+                                  init="zeros"),
+            }
+        elif kind == "slstm":
+            z = dict(init="zeros", dtype=jnp.float32)
+            out[f"sub{j}"] = {
+                "c": ParamSpec(st + (batch, d), ("stack", "batch", "embed"), **z),
+                "n": ParamSpec(st + (batch, d), ("stack", "batch", "embed"), **z),
+                "m": ParamSpec(st + (batch, d), ("stack", "batch", "embed"),
+                               init="zeros", dtype=jnp.float32),
+                "h": ParamSpec(st + (batch, d), ("stack", "batch", "embed"), **z),
+            }
+        elif kind == "mlstm":
+            z = dict(init="zeros", dtype=jnp.float32)
+            out[f"sub{j}"] = {
+                "C": ParamSpec(st + (batch, h_heads, dhead, dhead),
+                               ("stack", "batch", "heads", None, None), **z),
+                "n": ParamSpec(st + (batch, h_heads, dhead),
+                               ("stack", "batch", "heads", None), **z),
+                "m": ParamSpec(st + (batch, 1), ("stack", "batch", None), **z),
+            }
+    return out
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> PyTree:
+    sch = cache_schema(cfg, batch, max_seq)
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), sch,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+# ----------------------------------------------------------------- forward --
+def _apply_sub(p, cfg: ModelConfig, j: int, x, positions, cache, cache_index,
+               encoder_out, placement, use_flash, collect_moe=False):
+    kind = cfg.layer_pattern[j]
+    window = cfg.layer_window(j)
+    new_cache = None
+    moe_load = None
+    # perf (flag-gated): weight-stationary decode — activations are ~MBs at
+    # T=1 while FSDP weight gathers are ~GBs; shard the activation's embed
+    # dim over 'data' so matmuls contract a sharded dim (partial sums +
+    # activation-sized all-reduce) instead of all-gathering the weights.
+    import os
+    decode_ws = (os.environ.get("REPRO_PERF_DECODE_WS", "0") == "1"
+                 and cache is not None and x.shape[1] == 1)
+    if decode_ws:
+        x = constrain(x, None, None, "sp")
+    h = layers.rmsnorm(p["norm"], x, cfg.norm_eps)
+    if kind == "attn":
+        out, new_cache = attn_mod.attn(
+            p["attn"], cfg, h, positions, window=window, causal=True,
+            cache=cache, cache_index=cache_index, use_flash=use_flash)
+    elif kind == "mamba":
+        out, new_cache = mamba_mod.mamba(p["mamba"], cfg, h, state=cache)
+        if cache is None:
+            new_cache = None
+    elif kind == "slstm":
+        out, new_cache = xlstm_mod.slstm(p["cell"], cfg, h, state=cache)
+        if cache is None:
+            new_cache = None
+    elif kind == "mlstm":
+        out, new_cache = xlstm_mod.mlstm(p["cell"], cfg, h, state=cache)
+        if cache is None:
+            new_cache = None
+    x = x + out
+    if "cross" in p and encoder_out is not None:
+        h = layers.rmsnorm(p["cross_norm"], x, cfg.norm_eps)
+        out, _ = attn_mod.attn(p["cross"], cfg, h, positions, causal=False,
+                               kv_source=encoder_out, use_rope=False)
+        x = x + out
+    if "mlp" in p:
+        h = layers.rmsnorm(p["mlp_norm"], x, cfg.norm_eps)
+        x = x + layers.mlp(p["mlp"], h)
+    elif "moe" in p:
+        h = layers.rmsnorm(p["mlp_norm"], x, cfg.norm_eps)
+        if collect_moe:
+            out, stats = moe_mod.moe(p["moe"], cfg, h, placement=placement,
+                                     return_stats=True)
+            moe_load = stats["expert_load"]
+            x = x + out
+        else:
+            x = x + moe_mod.moe(p["moe"], cfg, h, placement=placement)
+    if decode_ws:
+        x = constrain(x, "dp", None, None)   # back to batch-sharded layout
+    return x, new_cache, moe_load
+
+
+def decoder_apply(params, cfg: ModelConfig, x, positions,
+                  cache: Optional[PyTree] = None, cache_index=0,
+                  encoder_out=None, placements: Optional[jax.Array] = None,
+                  use_flash: bool = False, remat: bool = True,
+                  collect_moe: bool = False, unroll: bool = False):
+    """x: (B, T, D) -> (B, T, D) [, new stacked cache, moe loads]."""
+    period = cfg.pattern_period
+    n_groups = cfg.n_layers // period
+
+    def body(carry, xs):
+        h = carry
+        gp, gc, gplace = xs
+        new_gc = {}
+        loads = []
+        for j in range(period):
+            sub_cache = gc[f"sub{j}"] if gc is not None else None
+            place_j = gplace[j] if gplace is not None else None
+            h, nc, load = _apply_sub(gp[f"sub{j}"], cfg, j, h, positions,
+                                     sub_cache, cache_index, encoder_out,
+                                     place_j, use_flash, collect_moe)
+            if nc is not None:
+                new_gc[f"sub{j}"] = nc
+            if load is not None:
+                loads.append(load)
+        loads_out = jnp.stack(loads) if loads else None
+        return h, ((new_gc if new_gc else None), loads_out)
+
+    if remat and cache is None:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+    if placements is not None:
+        placements = placements.reshape(n_groups, period, -1)
+    x, (new_caches, moe_loads) = jax.lax.scan(
+        body, x, (params["groups"], cache, placements),
+        unroll=n_groups if unroll else 1)
+    return x, new_caches, moe_loads
+
+
+def encode(params, cfg: ModelConfig, frames: jax.Array,
+           use_flash: bool = False, unroll: bool = False) -> jax.Array:
+    """Whisper-style encoder over stub frame embeddings (B, F, D)."""
+    ecfg = _encoder_cfg(cfg)
+    b, f, d = frames.shape
+    pos = jnp.arange(f)
+    half = d // 2
+    freqs = 10_000.0 ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    sin = jnp.sin(pos[:, None] * freqs)
+    cos = jnp.cos(pos[:, None] * freqs)
+    x = frames + jnp.concatenate([sin, cos], -1).astype(frames.dtype)[None]
+
+    def body(h, gp):
+        hh = layers.rmsnorm(gp["sub0"]["norm"], h, cfg.norm_eps)
+        out, _ = attn_mod.attn(gp["sub0"]["attn"], ecfg, hh, pos, causal=False,
+                               use_rope=False, use_flash=False)
+        h = h + out
+        hh = layers.rmsnorm(gp["sub0"]["mlp_norm"], h, cfg.norm_eps)
+        return h + layers.mlp(gp["sub0"]["mlp"], hh), None
+
+    n_enc = jax.tree.leaves(params["encoder"]["groups"])[0].shape[0]
+    x, _ = jax.lax.scan(body, x, params["encoder"]["groups"],
+                        unroll=n_enc if unroll else 1)
+    return layers.rmsnorm(params["encoder"]["final_norm"], x, cfg.norm_eps)
+
+
+def forward(params, cfg: ModelConfig, batch: Dict[str, jax.Array],
+            cache: Optional[PyTree] = None, cache_index=0,
+            placements: Optional[jax.Array] = None, use_flash: bool = False,
+            remat: bool = True, collect_moe: bool = False,
+            unroll: bool = False):
+    """batch: {"tokens": (B, T)} + optional {"frames"} (audio, encoded here),
+    {"encoder_out"} (audio, pre-encoded for decode steps) or {"pixel_embeds"}
+    (vlm prefix). Returns (hidden, new_cache) or (hidden, new_cache, loads).
+    """
+    tokens = batch["tokens"]
+    x = layers.embed(params["embed"], tokens).astype(jnp.bfloat16)
+    x = constrain(x, "dp", None, None)
+    encoder_out = batch.get("encoder_out")
+    if encoder_out is None and cfg.frontend == "audio_stub" and "frames" in batch:
+        encoder_out = encode(params, cfg, batch["frames"], use_flash,
+                             unroll=unroll)
+    elif cfg.frontend == "vision_stub" and "pixel_embeds" in batch:
+        x = jnp.concatenate([batch["pixel_embeds"].astype(x.dtype), x], axis=1)
+    t = x.shape[1]
+    positions = cache_index + jnp.arange(t)
+    x, new_cache, moe_loads = decoder_apply(
+        params, cfg, x, positions, cache=cache, cache_index=cache_index,
+        encoder_out=encoder_out, placements=placements, use_flash=use_flash,
+        remat=remat, collect_moe=collect_moe, unroll=unroll)
+    x = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if collect_moe:
+        return x, new_cache, moe_loads
+    return x, new_cache
+
+
+def logits_from_hidden(params, cfg: ModelConfig, hidden: jax.Array):
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("btd,vd->btv", hidden, params["embed"]["tokens"])
+    else:
+        logits = layers.unembed(params["unembed"], hidden)
+    # perf (flag-gated): keep the (B, Tc, V) tensor in bf16 until the f32
+    # logsumexp accumulation — halves the dominant loss-path bytes at large
+    # vocab (gemma3: 262k).
+    import os
+    if os.environ.get("REPRO_PERF_BF16_LOSS", "0") == "1":
+        logits = logits.astype(jnp.bfloat16)
+    # mask vocab padding
+    if cfg.vocab_padded != cfg.vocab:
+        pad = cfg.vocab_padded - cfg.vocab
+        mask = jnp.concatenate([jnp.zeros((cfg.vocab,), logits.dtype),
+                                jnp.full((pad,), -1e30, logits.dtype)])
+        logits = logits + mask
+    return logits
+
+
+def lm_loss(params, cfg: ModelConfig, batch: Dict[str, jax.Array],
+            placements: Optional[jax.Array] = None, use_flash: bool = False,
+            remat: bool = True, loss_chunks: int = 8,
+            collect_moe: bool = False, unroll: bool = False):
+    """Next-token cross-entropy; logits materialized per sequence chunk so the
+    (B, T, V) tensor never exists at once (vocab up to 262k)."""
+    if collect_moe:
+        hidden, _, moe_loads = forward(params, cfg, batch,
+                                       placements=placements,
+                                       use_flash=use_flash, remat=remat,
+                                       collect_moe=True, unroll=unroll)
+    else:
+        hidden, _ = forward(params, cfg, batch, placements=placements,
+                            use_flash=use_flash, remat=remat, unroll=unroll)
+        moe_loads = None
+    labels = batch["labels"]
+    if cfg.frontend == "vision_stub" and "pixel_embeds" in batch:
+        p = batch["pixel_embeds"].shape[1]
+        hidden = hidden[:, p:]                      # loss on text only
+    b, t, _ = hidden.shape
+    chunks = min(loss_chunks, t)
+    while t % chunks:
+        chunks -= 1
+    hidden = constrain(hidden, "dp", None, None)
+    hid_c = hidden.reshape(b, chunks, t // chunks, -1).transpose(1, 0, 2, 3)
+    lab_c = labels.reshape(b, chunks, t // chunks).transpose(1, 0, 2)
+
+    def one(chunk):
+        h, lab = chunk
+        h = constrain(h, "dp", None, None)
+        logits = logits_from_hidden(params, cfg, h).astype(jnp.float32)
+        logits = constrain(logits, "dp", None, "tp")
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(lab, 0)[..., None], axis=-1)[..., 0]
+        valid = (lab >= 0).astype(jnp.float32)
+        return jnp.sum((logz - gold) * valid), jnp.sum(valid)
+
+    losses, counts = jax.lax.map(one, (hid_c, lab_c))
+    loss = jnp.sum(losses) / jnp.maximum(jnp.sum(counts), 1.0)
+    if collect_moe:
+        return loss, moe_loads
+    return loss

@@ -1,0 +1,166 @@
+"""xLSTM blocks (arXiv:2405.04517): sLSTM (scalar memory, exponential gating)
+and mLSTM (matrix memory, attention-like). TPU adaptation: the mLSTM
+recurrence admits a chunked form — within a chunk the matrix-memory readout
+is a masked attention-like GEMM (MXU), across chunks the (B, H, Dh, Dh)
+memory is carried sequentially; the sLSTM is inherently sequential and runs
+as a time scan (it is the minority block and the model family is small)."""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .schema import ParamSpec
+
+
+def _heads(cfg: ModelConfig):
+    h = cfg.n_heads
+    dh = cfg.d_model // h
+    return h, dh
+
+
+def slstm_schema(cfg: ModelConfig, stack=()):
+    st = tuple(["stack"] * len(stack))
+    d = cfg.d_model
+    return {
+        "w_izfo": ParamSpec(stack + (d, 4 * d), st + ("embed", "mamba_inner")),
+        "r_izfo": ParamSpec(stack + (d, 4 * d), st + ("embed", "mamba_inner"),
+                            scale=0.05),
+        "b_izfo": ParamSpec(stack + (4 * d,), st + ("mamba_inner",),
+                            init="zeros"),
+        "out": ParamSpec(stack + (d, d), st + ("mamba_inner", "embed")),
+    }
+
+
+def slstm(p, cfg: ModelConfig, x: jax.Array,
+          state: Optional[dict] = None) -> Tuple[jax.Array, dict]:
+    """Scalar-memory LSTM with exponential gating + stabilizer state.
+
+    state: {"c","n","m","h"} each (B, D).
+    """
+    b, t, d = x.shape
+    if state is None:
+        zeros = jnp.zeros((b, d), jnp.float32)
+        state = {"c": zeros, "n": zeros, "m": zeros - 1e30, "h": zeros}
+    wx = jnp.einsum("btd,de->bte", x, p["w_izfo"])          # (B, T, 4D)
+
+    def step(s, wx_t):
+        rec = jnp.einsum("bd,de->be", s["h"].astype(x.dtype), p["r_izfo"])
+        z_i, z_z, z_f, z_o = jnp.split(
+            (wx_t + rec + p["b_izfo"]).astype(jnp.float32), 4, axis=-1)
+        i_log = z_i                                          # exp-gate logits
+        f_log = jax.nn.log_sigmoid(z_f)
+        m_new = jnp.maximum(f_log + s["m"], i_log)           # stabilizer
+        i_g = jnp.exp(i_log - m_new)
+        f_g = jnp.exp(f_log + s["m"] - m_new)
+        c_new = f_g * s["c"] + i_g * jnp.tanh(z_z)
+        n_new = f_g * s["n"] + i_g
+        h_new = jax.nn.sigmoid(z_o) * c_new / jnp.maximum(n_new, 1e-6)
+        return {"c": c_new, "n": n_new, "m": m_new, "h": h_new}, h_new
+
+    state, hs = jax.lax.scan(step, state, jnp.moveaxis(wx, 1, 0))
+    hs = jnp.moveaxis(hs, 0, 1).astype(x.dtype)              # (B, T, D)
+    return jnp.einsum("btd,de->bte", hs, p["out"]), state
+
+
+def mlstm_schema(cfg: ModelConfig, stack=()):
+    st = tuple(["stack"] * len(stack))
+    d = cfg.d_model
+    return {
+        "wq": ParamSpec(stack + (d, d), st + ("embed", "q_heads")),
+        "wk": ParamSpec(stack + (d, d), st + ("embed", "q_heads")),
+        "wv": ParamSpec(stack + (d, d), st + ("embed", "q_heads")),
+        "w_if": ParamSpec(stack + (d, 2), st + ("embed", None),
+                          dtype=jnp.float32),
+        "b_if": ParamSpec(stack + (2,), st + (None,), init="zeros",
+                          dtype=jnp.float32),
+        "out": ParamSpec(stack + (d, d), st + ("q_heads", "embed")),
+    }
+
+
+def mlstm(p, cfg: ModelConfig, x: jax.Array,
+          state: Optional[dict] = None, chunk: int = 128
+          ) -> Tuple[jax.Array, dict]:
+    """Matrix-memory LSTM, chunkwise-parallel.
+
+    state: {"C": (B,H,Dh,Dh), "n": (B,H,Dh), "m": (B,H)}.
+    Within a chunk: decay-masked attention-like readout (quadratic in chunk
+    only); across chunks: sequential memory carry. Simplified stabilizer:
+    per-chunk max-decay normalization.
+    """
+    b, t, d = x.shape
+    h, dh = _heads(cfg)
+    if state is None:
+        state = {"C": jnp.zeros((b, h, dh, dh), jnp.float32),
+                 "n": jnp.zeros((b, h, dh), jnp.float32),
+                 "m": jnp.zeros((b, 1), jnp.float32)}   # shared across heads
+    # f32 cell arithmetic: exponential gating amplifies bf16 rounding into
+    # chunking-dependent outputs (verified: f32 is chunk-invariant to 1e-5).
+    q = jnp.einsum("btd,de->bte", x, p["wq"]).reshape(b, t, h, dh)
+    q = q.astype(jnp.float32)
+    k = jnp.einsum("btd,de->bte", x, p["wk"]).reshape(b, t, h, dh)
+    k = k.astype(jnp.float32) / (dh ** 0.5)
+    v = jnp.einsum("btd,de->bte", x, p["wv"]).reshape(b, t, h, dh)
+    v = v.astype(jnp.float32)
+    if_log = jnp.einsum("btd,dg->btg", x.astype(jnp.float32), p["w_if"]) + \
+        p["b_if"]
+    i_log = if_log[..., 0]                                   # (B, T)
+    f_log = jax.nn.log_sigmoid(if_log[..., 1])               # (B, T)
+
+    c = min(chunk, t)
+    while t % c:
+        c -= 1
+    nc = t // c
+
+    def chunk_step(s, inp):
+        # Gates are per-token scalars shared across heads (simplification of
+        # the per-head gates in the paper; noted in DESIGN.md).
+        qc, kc, vc, ic, fc = inp                             # (B,c,...) per chunk
+        fcum = jnp.cumsum(fc, axis=1)                        # F_j (B, c)
+        # intra-chunk decay: w[j,u] = exp(F_j - F_u + i_u) for u <= j
+        decay = fcum[:, :, None] - fcum[:, None, :] + ic[:, None, :]
+        mask = jnp.tril(jnp.ones((c, c), bool))
+        decay = jnp.where(mask[None], decay, -1e30)
+        # per-position stabilizer: m_j = max(max_u decay[j,u], m_carry + F_j)
+        m_pos = jnp.maximum(jnp.max(decay, axis=2), s["m"] + fcum)   # (B, c)
+        w = jnp.exp(decay - m_pos[:, :, None])               # (B, c, c)
+        carry_scale = jnp.exp(s["m"] + fcum - m_pos)         # (B, c)
+        logits = jnp.einsum("bjhd,buhd->bhju", qc, kc)       # (B,H,c,c)
+        intra = jnp.einsum("bhju,bju,buhe->bjhe", logits,
+                           w.astype(logits.dtype), vc)
+        inter = jnp.einsum("bjhd,bhde->bjhe", qc, s["C"].astype(qc.dtype))
+        num = intra + inter * carry_scale[:, :, None, None].astype(qc.dtype)
+        den_intra = jnp.einsum("bhju,bju->bjh",
+                               logits, w.astype(logits.dtype))
+        den_inter = jnp.einsum("bjhd,bhd->bjh", qc, s["n"].astype(qc.dtype))
+        den = jnp.abs(den_intra +
+                      den_inter * carry_scale[:, :, None].astype(qc.dtype))
+        # floor at exp(-m): in true (unstabilized) scale this is max(|.|, 1),
+        # making the output invariant to the chunking of the stabilizer.
+        floor = jnp.exp(-m_pos)[:, :, None]
+        out_c = num / jnp.maximum(den, floor.astype(den.dtype))[..., None]
+        # end-of-chunk memory carry
+        f_tot = fcum[:, -1:]                                 # (B, 1)
+        tail = f_tot - fcum + ic                             # (B, c)
+        m_new = jnp.maximum(s["m"] + f_tot, jnp.max(tail, axis=1,
+                                                    keepdims=True))
+        wk = jnp.exp(tail - m_new)                           # (B, c)
+        c_upd = jnp.einsum("bu,buhd,buhe->bhde",
+                           wk.astype(kc.dtype), kc, vc).astype(jnp.float32)
+        n_upd = jnp.einsum("bu,buhd->bhd",
+                           wk.astype(kc.dtype), kc).astype(jnp.float32)
+        scale_old = jnp.exp(s["m"] + f_tot - m_new)          # (B, 1)
+        c_new = s["C"] * scale_old[:, :, None, None] + c_upd
+        n_new = s["n"] * scale_old[:, :, None] + n_upd
+        return {"C": c_new, "n": n_new, "m": m_new}, out_c
+
+    xs = (q.reshape(b, nc, c, h, dh), k.reshape(b, nc, c, h, dh),
+          v.reshape(b, nc, c, h, dh), i_log.reshape(b, nc, c),
+          f_log.reshape(b, nc, c))
+    xs = jax.tree.map(lambda a: jnp.moveaxis(a, 1, 0), xs)
+    state, outs = jax.lax.scan(chunk_step, state, xs)
+    outs = jnp.moveaxis(outs, 0, 1).reshape(b, t, h * dh).astype(x.dtype)
+    return jnp.einsum("bte,ed->btd", outs, p["out"]), state

@@ -1,0 +1,94 @@
+"""Logical-axis -> mesh-axis sharding rules for params, caches and data.
+
+Parameter 2-D sharding (TP x FSDP): tensor-parallel logical axes (vocab,
+q_heads, kv_flat, mlp, expert, mamba_inner) map to "model"; the d_model
+("embed") axis maps to "data" — ZeRO-3-style parameter sharding whose
+all-gathers XLA schedules ahead of use. Divisibility fallback (e.g. qwen2's
+28 heads on a 16-way axis) replicates that dim and is surfaced via
+``schema.replication_report`` for the roofline notes.
+
+Batch ("batch") shards over (pod, data); for global_batch < DP degree
+(long_500k has batch 1) it falls back to replicated and the KV sequence
+("kv_seq") shards over "data" instead — sequence parallelism for the cache.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import schema as schema_mod
+
+PARAM_RULES = {
+    "vocab": "model",
+    "q_heads": "model",
+    "kv_flat": "model",
+    "mlp": "model",
+    "expert": "model",
+    "mamba_inner": "model",
+    "heads": "model",
+    "embed": "data",            # FSDP over the data axis
+    "stack": None,
+    "conv": None,
+    None: None,
+}
+
+PARAM_RULES_NO_FSDP = {**PARAM_RULES, "embed": None}
+
+
+def _dp_axes(mesh: Mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def dp_degree(mesh: Mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in _dp_axes(mesh)]))
+
+
+def param_shardings(model_schema, mesh: Mesh, fsdp: bool = True):
+    rules = PARAM_RULES if fsdp else PARAM_RULES_NO_FSDP
+    return schema_mod.shardings(model_schema, mesh, rules)
+
+
+def param_pspecs(model_schema, mesh: Mesh, fsdp: bool = True):
+    rules = PARAM_RULES if fsdp else PARAM_RULES_NO_FSDP
+    return schema_mod.partition_specs(model_schema, mesh, rules)
+
+
+def batch_pspec(mesh: Mesh, global_batch: int) -> P:
+    dp = _dp_axes(mesh)
+    if global_batch % dp_degree(mesh) == 0:
+        return P(dp, None)
+    return P(None, None)
+
+
+def batch_sharding(mesh: Mesh, global_batch: int) -> NamedSharding:
+    return NamedSharding(mesh, batch_pspec(mesh, global_batch))
+
+
+def cache_rules(mesh: Mesh, global_batch: int) -> dict:
+    """KV-cache logical axes; SP fallback for unshardable batch."""
+    dp = _dp_axes(mesh)
+    batch_ok = global_batch % dp_degree(mesh) == 0
+    return {
+        **PARAM_RULES,
+        "embed": None,                       # cache activations: no FSDP
+        "batch": dp if batch_ok else None,
+        "kv_seq": None if batch_ok else "data",   # sequence-parallel cache
+    }
+
+
+def cache_shardings(cache_schema, mesh: Mesh, global_batch: int):
+    return schema_mod.shardings(cache_schema, mesh,
+                                cache_rules(mesh, global_batch))
+
+
+def cache_pspecs(cache_schema, mesh: Mesh, global_batch: int):
+    return schema_mod.partition_specs(cache_schema, mesh,
+                                      cache_rules(mesh, global_batch))
+
+
+def replication_report(model_schema, mesh: Mesh, fsdp: bool = True) -> dict:
+    rules = PARAM_RULES if fsdp else PARAM_RULES_NO_FSDP
+    return schema_mod.replication_report(model_schema, mesh, rules)

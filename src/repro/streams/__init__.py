@@ -1,0 +1,13 @@
+"""Faithful stream-processing substrate: engine, operators, state, generator."""
+
+from .engine import IntervalReport, KeyedStage
+from .generator import WorkloadGen, zipf_frequencies
+from .operators import (MergeCounts, Operator, PartialWordCount, WindowedSelfJoin,
+                        WordCount)
+from .state import KeyState, TaskStateStore
+
+__all__ = [
+    "IntervalReport", "KeyedStage", "WorkloadGen", "zipf_frequencies",
+    "MergeCounts", "Operator", "PartialWordCount", "WindowedSelfJoin",
+    "WordCount", "KeyState", "TaskStateStore",
+]

@@ -1,0 +1,232 @@
+"""Interval-synchronous DSPE with the paper's rebalance protocol (Fig. 5).
+
+One keyed stage = N_D task instances consuming a key-partitioned tuple
+stream under the controller's mixed assignment function. Intervals are
+discretized (paper Sec. II-A); each interval is processed in micro-batches so
+the Pause -> migrate -> Resume protocol has real in-flight traffic to handle:
+
+  * tuples whose key is in Delta(F, F') during the migration window are
+    buffered ("cached locally" per the paper) and replayed on Resume;
+  * tuples for all other keys flow uninterrupted (the paper's key property);
+  * per-key state moves between task stores atomically at the boundary.
+
+The engine also produces the performance model used by the benchmarks:
+interval makespan = max per-task cost + migration stall, so throughput =
+tuples / makespan (relative units; the paper measures the same shape of
+quantity on Storm).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.balancer import Assignment, BalanceConfig, KeyStats, metrics
+from repro.core.controller import RebalanceController
+
+from .operators import Operator
+from .state import TaskStateStore
+
+
+@dataclasses.dataclass
+class IntervalReport:
+    interval: int
+    tuples: int
+    makespan: float              # max task cost (critical path)
+    migration_stall: float       # migration bytes / bandwidth
+    throughput: float            # tuples / (makespan + stall)
+    skewness: float              # max load / mean load
+    theta: float
+    migrated_bytes: float
+    table_size: int
+    plan_time_s: float
+    buffered: int                # tuples held during Pause
+    task_loads: np.ndarray
+
+
+class KeyedStage:
+    """N_D task instances + controller-owned assignment (one logical operator)."""
+
+    def __init__(self, operator: Operator, controller: RebalanceController,
+                 window: int = 1, migration_bandwidth: float = 1e6,
+                 micro_batches: int = 8, migration_batches: int = 2):
+        self.operator = operator
+        self.controller = controller
+        self.window = window
+        self.n_tasks = controller.assignment.n_dest
+        self.stores = [TaskStateStore(window) for _ in range(self.n_tasks)]
+        self.migration_bandwidth = migration_bandwidth
+        self.micro_batches = micro_batches
+        self.migration_batches = migration_batches
+        self.reports: List[IntervalReport] = []
+        self.outputs: Dict[int, Any] = {}
+        self.emitted_sum = 0.0                      # running sum of numeric emits
+        self.last_stats: Optional[KeyStats] = None
+        self._interval = 0
+        self._pending_delta: Optional[set] = None   # keys paused this interval
+        self._migrated_bytes_pending = 0.0
+        self._plan_time_pending = 0.0
+        # wire the migration executor (paper steps 5-6)
+        self.controller.executor = self._migrate
+
+    # -- state migration: move KeyState between stores -------------------------
+    def _migrate(self, moved_keys: np.ndarray, old: Assignment,
+                 new: Assignment) -> None:
+        keys = [int(k) for k in moved_keys]
+        src = old.dest(np.asarray(keys, dtype=np.int64))
+        dst = new.dest(np.asarray(keys, dtype=np.int64))
+        by_src: Dict[int, List[int]] = defaultdict(list)
+        for k, s, d in zip(keys, src, dst):
+            if s != d:
+                by_src[int(s)].append(k)
+        total = 0.0
+        extracted: Dict[int, Dict] = {}
+        for s, ks in by_src.items():
+            total += self.stores[s].migrated_bytes(ks)
+            extracted.update(self.stores[s].extract(ks))
+        for k, state in extracted.items():
+            d = int(new.dest(np.asarray([k], dtype=np.int64))[0])
+            self.stores[d].install({k: state})
+        self._migrated_bytes_pending += total
+        self._pending_delta = set(keys)
+
+    # -- one interval of traffic ------------------------------------------------
+    def process_interval(self, tuples: List[Tuple[int, Any]]) -> IntervalReport:
+        self._interval += 1
+        iv = self._interval
+        n = len(tuples)
+        task_cost = np.zeros(self.n_tasks)
+        key_cost: Dict[int, float] = defaultdict(float)
+        key_freq: Dict[int, float] = defaultdict(float)
+        buffer: List[Tuple[int, Any]] = []
+        buffered_count = 0
+
+        keys_arr = np.asarray([k for k, _ in tuples], dtype=np.int64)
+        dests = self.controller.assignment.dest(keys_arr) if n else np.zeros(0, int)
+
+        batch_edges = np.linspace(0, n, self.micro_batches + 1).astype(int)
+        for b in range(self.micro_batches):
+            lo, hi = batch_edges[b], batch_edges[b + 1]
+            migrating = (self._pending_delta is not None
+                         and b < self.migration_batches)
+            if not migrating and buffer:
+                # Resume: replay buffered tuples with the CURRENT assignment
+                for k, v in buffer:
+                    d = int(self.controller.assignment.dest(
+                        np.asarray([k], dtype=np.int64))[0])
+                    self._run_one(d, iv, k, v, task_cost, key_cost, key_freq)
+                buffer.clear()
+                self._pending_delta = None
+            for i in range(lo, hi):
+                k, v = tuples[i]
+                if migrating and k in self._pending_delta:
+                    buffer.append((k, v))           # Pause: cache locally
+                    buffered_count += 1
+                    continue
+                self._run_one(int(dests[i]), iv, k, v, task_cost, key_cost,
+                              key_freq)
+        if buffer:                                   # traffic ended mid-pause
+            for k, v in buffer:
+                d = int(self.controller.assignment.dest(
+                    np.asarray([k], dtype=np.int64))[0])
+                self._run_one(d, iv, k, v, task_cost, key_cost, key_freq)
+            buffer.clear()
+        self._pending_delta = None
+
+        for store in self.stores:
+            store.end_interval(iv)
+
+        # -- measurement + controller handoff (paper steps 1-2) -----------------
+        stats = self._collect_stats(key_cost, key_freq)
+        stall = self._migrated_bytes_pending / self.migration_bandwidth
+        makespan = float(task_cost.max()) if n else 0.0
+        report = IntervalReport(
+            interval=iv, tuples=n, makespan=makespan, migration_stall=stall,
+            throughput=n / (makespan + stall) if (makespan + stall) > 0 else 0.0,
+            skewness=metrics.skewness(task_cost) if n else 1.0,
+            theta=metrics.theta(task_cost) if n else 0.0,
+            migrated_bytes=self._migrated_bytes_pending,
+            table_size=self.controller.assignment.table_size,
+            plan_time_s=self._plan_time_pending,
+            buffered=buffered_count, task_loads=task_cost,
+        )
+        self.reports.append(report)
+        self._migrated_bytes_pending = 0.0
+        self._plan_time_pending = 0.0
+        if stats is not None:
+            self.last_stats = stats
+            ev = self.controller.on_interval(stats)
+            if ev.result is not None:
+                self._plan_time_pending = ev.result.plan_time_s
+        return report
+
+    def _run_one(self, d: int, interval: int, key: int, value: Any,
+                 task_cost, key_cost, key_freq) -> None:
+        outs, cost = self.operator.process(self.stores[d], interval, key, value)
+        task_cost[d] += cost
+        key_cost[key] += cost
+        key_freq[key] += 1
+        for ok, ov in outs:
+            self.outputs[ok] = ov
+            if isinstance(ov, (int, float)):
+                self.emitted_sum += float(ov)
+
+    def _collect_stats(self, key_cost, key_freq) -> Optional[KeyStats]:
+        # Paper step 1: every instance reports c(k) AND S(k,w) for each key
+        # *assigned to it* — the stat universe is (keys seen this interval)
+        # UNION (keys still holding window state). Omitting quiet stateful
+        # keys would let a table cleanup strand their state on the old task.
+        sizes: Dict[int, float] = {}
+        for store in self.stores:
+            sizes.update(store.sizes())
+        universe = set(key_cost) | set(sizes)
+        if not universe:
+            return None
+        keys = np.fromiter(sorted(universe), dtype=np.int64, count=len(universe))
+        cost = np.fromiter((key_cost.get(int(k), 0.0) for k in keys),
+                           dtype=np.float64)
+        freq = np.fromiter((key_freq.get(int(k), 0.0) for k in keys),
+                           dtype=np.float64)
+        mem = np.fromiter((sizes.get(int(k), 0.0) for k in keys),
+                          dtype=np.float64)
+        return KeyStats(keys=keys, cost=cost, mem=mem, freq=freq)
+
+    # -- elastic scaling (paper Fig. 15) ----------------------------------------
+    def scale_to(self, n_tasks: int) -> None:
+        """Add/remove task instances and rebalance state onto the new fleet.
+
+        New stores must exist before the controller's migration executor runs;
+        shrink requires draining removed stores first (state migrates away via
+        the rescale plan, since no key may map to a dead task)."""
+        if self.last_stats is None:
+            raise RuntimeError("scale_to requires at least one processed interval")
+        while len(self.stores) < n_tasks:
+            self.stores.append(TaskStateStore(self.window))
+        self.controller.rescale(n_tasks, self.last_stats)
+        # reconciliation sweep: the rescale executor only covers keys present
+        # in the last interval's stats; stale-state keys re-hash too.
+        for s_idx, store in enumerate(self.stores):
+            keys = list(store.keys)
+            if not keys:
+                continue
+            dst = self.controller.assignment.dest(np.asarray(keys, np.int64))
+            movers = [k for k, d in zip(keys, dst) if int(d) != s_idx]
+            if movers:
+                self._migrated_bytes_pending += store.migrated_bytes(movers)
+                extracted = store.extract(movers)
+                for k in movers:
+                    d = int(self.controller.assignment.dest(
+                        np.asarray([k], np.int64))[0])
+                    self.stores[d].install({k: extracted[k]})
+        self.stores = self.stores[:n_tasks]
+        self.n_tasks = n_tasks
+
+    # -- invariant helpers for tests -------------------------------------------
+    def total_state_keys(self) -> int:
+        return sum(len(s.keys) for s in self.stores)
+
+    def key_location(self, key: int) -> List[int]:
+        return [i for i, s in enumerate(self.stores) if key in s.keys]

@@ -1,0 +1,95 @@
+"""Stateful operators — the paper's two real workloads (Sec. V).
+
+* :class:`WordCount` — "store and aggregation on keywords" (Social data):
+  per-key counts over the sliding window.
+* :class:`WindowedSelfJoin` — "self-join over sliding window" (Stock data):
+  each incoming tuple joins against all tuples of the same key within the
+  window; join work (and hence c(k)) grows superlinearly with key frequency,
+  which is exactly the skew-amplification the paper targets.
+
+Operators report per-tuple cost so the engine can measure c(k) instead of
+assuming cost == frequency (the paper makes the same distinction).
+"""
+
+from __future__ import annotations
+
+from typing import Any, List, Tuple
+
+from .state import TaskStateStore
+
+
+class Operator:
+    name = "op"
+
+    def process(self, store: TaskStateStore, interval: int, key: int,
+                value: Any) -> Tuple[List[Tuple[int, Any]], float]:
+        """Returns (output tuples, cost units consumed)."""
+        raise NotImplementedError
+
+
+class WordCount(Operator):
+    name = "wordcount"
+
+    def __init__(self, bytes_per_entry: float = 16.0):
+        self.bytes_per_entry = bytes_per_entry
+
+    def process(self, store, interval, key, value):
+        ks = store.state(key)
+        sl = ks.slice_for(interval, init=lambda: {"count": 0},
+                          size=self.bytes_per_entry)
+        sl.payload["count"] += 1
+        total = sum(s.payload["count"] for s in ks.iter_window())
+        return [(key, total)], 1.0
+
+
+class WindowedSelfJoin(Operator):
+    name = "selfjoin"
+
+    def __init__(self, bytes_per_tuple: float = 32.0, probe_cost: float = 0.01):
+        self.bytes_per_tuple = bytes_per_tuple
+        self.probe_cost = probe_cost
+
+    def process(self, store, interval, key, value):
+        ks = store.state(key)
+        matches = 0
+        for sl in ks.iter_window():
+            matches += len(sl.payload)
+        cur = ks.slice_for(interval, init=list, size=0.0)
+        cur.payload.append(value)
+        cur.size += self.bytes_per_tuple
+        # one output per match; cost = insert + probes over window
+        cost = 1.0 + self.probe_cost * matches
+        return [(key, matches)], cost
+
+
+class PartialWordCount(Operator):
+    """Split-key (PKG-style) word count: emits partial counts that must be
+    merged downstream — used to model PKG's extra merge operator (Fig. 2a)."""
+
+    name = "partial_wordcount"
+
+    def __init__(self, bytes_per_entry: float = 16.0):
+        self.bytes_per_entry = bytes_per_entry
+
+    def process(self, store, interval, key, value):
+        ks = store.state(key)
+        sl = ks.slice_for(interval, init=lambda: {"count": 0},
+                          size=self.bytes_per_entry)
+        sl.payload["count"] += 1
+        return [(key, sl.payload["count"])], 1.0
+
+
+class MergeCounts(Operator):
+    """PKG's downstream merger: combines partial counts per key."""
+
+    name = "merge"
+
+    def __init__(self):
+        self.bytes_per_entry = 16.0
+
+    def process(self, store, interval, key, value):
+        ks = store.state(key)
+        sl = ks.slice_for(interval, init=lambda: {"count": 0},
+                          size=self.bytes_per_entry)
+        sl.payload["count"] = max(sl.payload["count"], int(value))
+        return [], 0.5

@@ -1,0 +1,88 @@
+"""Keyed, windowed state store for stateful operators (paper Sec. II-A).
+
+Each key holds one state object per time interval; the store evicts state
+older than ``window`` intervals after the interval closes (the paper's model:
+"the task instance erases the state from T_{i-w} after finishing T_i").
+``S(k, w)`` — the migration-cost weight — is the summed size over the window.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict, defaultdict
+from typing import Any, Callable, Dict, Iterator, List, Tuple
+
+
+@dataclasses.dataclass
+class WindowSlice:
+    interval: int
+    payload: Any
+    size: float        # bytes (or abstract units) — feeds S(k, w)
+
+
+class KeyState:
+    """Ring of per-interval slices for one key."""
+
+    def __init__(self, window: int):
+        self.window = window
+        self.slices: "OrderedDict[int, WindowSlice]" = OrderedDict()
+
+    def slice_for(self, interval: int, init: Callable[[], Any],
+                  size: float = 0.0) -> WindowSlice:
+        sl = self.slices.get(interval)
+        if sl is None:
+            sl = WindowSlice(interval, init(), size)
+            self.slices[interval] = sl
+        return sl
+
+    def evict_before(self, interval: int) -> None:
+        cutoff = interval - self.window + 1
+        stale = [i for i in self.slices if i < cutoff]
+        for i in stale:
+            del self.slices[i]
+
+    def total_size(self) -> float:
+        return float(sum(sl.size for sl in self.slices.values()))
+
+    def iter_window(self) -> Iterator[WindowSlice]:
+        return iter(self.slices.values())
+
+
+class TaskStateStore:
+    """All keyed state held by one task instance."""
+
+    def __init__(self, window: int):
+        self.window = window
+        self.keys: Dict[int, KeyState] = {}
+
+    def state(self, key: int) -> KeyState:
+        ks = self.keys.get(key)
+        if ks is None:
+            ks = KeyState(self.window)
+            self.keys[key] = ks
+        return ks
+
+    def end_interval(self, interval: int) -> None:
+        for ks in self.keys.values():
+            ks.evict_before(interval)
+
+    def sizes(self) -> Dict[int, float]:
+        return {k: ks.total_size() for k, ks in self.keys.items()}
+
+    # -- migration primitives (paper steps 5-6) --------------------------------
+    def extract(self, keys: List[int]) -> Dict[int, KeyState]:
+        out = {}
+        for k in keys:
+            if k in self.keys:
+                out[k] = self.keys.pop(k)
+        return out
+
+    def install(self, states: Dict[int, KeyState]) -> None:
+        for k, ks in states.items():
+            if k in self.keys:
+                raise RuntimeError(f"key {k} already present on target task")
+            self.keys[k] = ks
+
+    def migrated_bytes(self, keys: List[int]) -> float:
+        return float(sum(self.keys[k].total_size() for k in keys
+                         if k in self.keys))

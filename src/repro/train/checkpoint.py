@@ -1,0 +1,139 @@
+"""Checkpointing: atomic, compressed, resumable (fault-tolerance substrate).
+
+Layout: <dir>/step_<N>/state.msgpack.zst + manifest.json, with a ``latest``
+pointer file written only after a successful save (crash-safe: a partial
+save can never become ``latest``). Restore validates the manifest (arch,
+tree structure hash) before loading. The balancer's routing table and the
+RNG/step live in the same bundle so a restart resumes mid-interval cleanly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import shutil
+import tempfile
+import time
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+import zstandard
+
+
+def _tree_paths(tree) -> list:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [(jax.tree_util.keystr(kp), leaf) for kp, leaf in flat]
+
+
+def _structure_hash(tree) -> str:
+    keys = "|".join(k for k, _ in _tree_paths(tree))
+    return hashlib.sha256(keys.encode()).hexdigest()[:16]
+
+
+def _pack_tree(tree) -> bytes:
+    entries = {}
+    for key, leaf in _tree_paths(tree):
+        arr = np.asarray(leaf)
+        # bf16 has no numpy dtype string portable through msgpack: view as u16
+        if arr.dtype == jnp.bfloat16:
+            entries[key] = {"d": "bfloat16", "s": arr.shape,
+                            "b": arr.view(np.uint16).tobytes()}
+        else:
+            entries[key] = {"d": arr.dtype.str, "s": arr.shape,
+                            "b": arr.tobytes()}
+    return msgpack.packb(entries, use_bin_type=True)
+
+
+def _unpack_tree(blob: bytes, like) -> Any:
+    entries = msgpack.unpackb(blob, raw=False, strict_map_key=False)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for kp, leaf in flat:
+        key = jax.tree_util.keystr(kp)
+        e = entries[key]
+        shape = tuple(e["s"])
+        if e["d"] == "bfloat16":
+            arr = np.frombuffer(e["b"], np.uint16).reshape(shape)
+            out = jnp.asarray(arr.view(jnp.bfloat16))
+        else:
+            arr = np.frombuffer(e["b"], np.dtype(e["d"])).reshape(shape)
+            out = jnp.asarray(arr)
+        leaves.append(out)
+    return jax.tree_util.tree_unflatten(treedef, [l for l in leaves])
+
+
+@dataclasses.dataclass
+class CheckpointManager:
+    directory: str
+    keep: int = 3
+    compression_level: int = 3
+
+    def __post_init__(self):
+        self.dir = Path(self.directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, state: Dict[str, Any],
+             meta: Optional[Dict[str, Any]] = None) -> Path:
+        target = self.dir / f"step_{step:08d}"
+        tmp = Path(tempfile.mkdtemp(dir=self.dir, prefix=".tmp_"))
+        try:
+            blob = _pack_tree(state)
+            comp = zstandard.ZstdCompressor(level=self.compression_level)
+            (tmp / "state.msgpack.zst").write_bytes(comp.compress(blob))
+            manifest = {
+                "step": step,
+                "time": time.time(),
+                "structure": _structure_hash(state),
+                "bytes_raw": len(blob),
+                **(meta or {}),
+            }
+            (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+            if target.exists():
+                shutil.rmtree(target)
+            os.replace(tmp, target)                      # atomic publish
+        except BaseException:
+            shutil.rmtree(tmp, ignore_errors=True)
+            raise
+        # 'latest' is written only after the directory is fully in place
+        latest_tmp = self.dir / ".latest_tmp"
+        latest_tmp.write_text(target.name)
+        os.replace(latest_tmp, self.dir / "latest")
+        self._gc()
+        return target
+
+    def _gc(self):
+        steps = sorted(self.dir.glob("step_*"))
+        for old in steps[:-self.keep]:
+            shutil.rmtree(old, ignore_errors=True)
+
+    # --------------------------------------------------------------- restore
+    def latest_step(self) -> Optional[int]:
+        latest = self.dir / "latest"
+        if not latest.exists():
+            return None
+        name = latest.read_text().strip()
+        if not (self.dir / name).exists():
+            return None
+        return int(name.split("_")[1])
+
+    def restore(self, like: Dict[str, Any],
+                step: Optional[int] = None) -> Tuple[int, Any, Dict]:
+        step = self.latest_step() if step is None else step
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        target = self.dir / f"step_{step:08d}"
+        manifest = json.loads((target / "manifest.json").read_text())
+        if manifest["structure"] != _structure_hash(like):
+            raise ValueError("checkpoint structure mismatch: "
+                             f"{manifest['structure']} vs current tree")
+        comp = zstandard.ZstdDecompressor()
+        blob = comp.decompress((target / "state.msgpack.zst").read_bytes())
+        state = _unpack_tree(blob, like)
+        return step, state, manifest

@@ -1,0 +1,98 @@
+"""AdamW with f32 master weights, global-norm clipping, warmup-cosine
+schedule — built from scratch (no optax in this environment).
+
+Optimizer state is a pytree mirroring the params, so the param sharding tree
+applies verbatim (ZeRO-style: moments shard exactly like their parameter).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def schedule(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = cfg.lr * jnp.minimum(1.0, (step + 1.0) / max(cfg.warmup_steps, 1))
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * \
+        (1.0 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < cfg.warmup_steps, warm, cfg.lr * cos)
+
+
+def opt_init(params) -> Dict[str, Any]:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "master": jax.tree.map(lambda p: p.astype(jnp.float32), params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def opt_update(grads, opt_state, params, cfg: OptConfig
+               ) -> Tuple[Any, Dict[str, Any], Dict[str, jax.Array]]:
+    step = opt_state["step"]
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+    lr = schedule(cfg, step)
+    t = (step + 1).astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+
+    def upd(g, m, v, master):
+        g = g.astype(jnp.float32) * scale
+        m_new = cfg.b1 * m + (1 - cfg.b1) * g
+        v_new = cfg.b2 * v + (1 - cfg.b2) * g * g
+        update = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + cfg.eps)
+        master_new = master - lr * (update + cfg.weight_decay * master)
+        return m_new, v_new, master_new
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(opt_state["m"])
+    flat_v = treedef.flatten_up_to(opt_state["v"])
+    flat_w = treedef.flatten_up_to(opt_state["master"])
+    outs = [upd(g, m, v, w) for g, m, v, w in
+            zip(flat_g, flat_m, flat_v, flat_w)]
+    new_m = treedef.unflatten([o[0] for o in outs])
+    new_v = treedef.unflatten([o[1] for o in outs])
+    new_master = treedef.unflatten([o[2] for o in outs])
+    new_params = jax.tree.map(
+        lambda w, p: w.astype(p.dtype), new_master, params)
+    new_state = {"m": new_m, "v": new_v, "master": new_master,
+                 "step": step + 1}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}
+
+
+def opt_shardings(param_shardings, mesh):
+    """Optimizer-state sharding mirrors the parameter sharding."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    return {
+        "m": param_shardings,
+        "v": param_shardings,
+        "master": param_shardings,
+        "step": NamedSharding(mesh, P()),
+    }

@@ -1,0 +1,141 @@
+"""Jitted training step: microbatched grad accumulation + AdamW update.
+
+Microbatches run as a lax.scan inside the step so the DP gradient sync
+happens once per step (XLA inserts the hierarchical all-reduce from the
+sharding: intra-pod reduce-scatter + inter-pod all-reduce on the shard).
+Expert loads for the SkewShield balancer are accumulated alongside.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm_loss
+from repro.models.config import ModelConfig
+from repro.sharding.ctx import constrain
+
+from .optimizer import OptConfig, opt_update
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: OptConfig,
+                    microbatches: int = 1, use_flash: bool = False,
+                    collect_moe: bool = False, remat: bool = True,
+                    accum_dtype=jnp.float32, loss_chunks: int = 8,
+                    unroll: bool = False):
+    """Returns train_step(params, opt_state, batch, placements) ->
+    (params, opt_state, metrics)."""
+
+    def loss_fn(params, mb, placements):
+        if collect_moe and cfg.moe_experts:
+            loss, loads = lm_loss(params, cfg, mb, placements=placements,
+                                  use_flash=use_flash, remat=remat,
+                                  collect_moe=True, loss_chunks=loss_chunks,
+                                  unroll=unroll)
+            return loss, loads
+        loss = lm_loss(params, cfg, mb, placements=placements,
+                       use_flash=use_flash, remat=remat,
+                       loss_chunks=loss_chunks, unroll=unroll)
+        return loss, None
+
+    import os
+    if os.environ.get("REPRO_PERF_BF16_ACCUM", "0") == "1":
+        accum_dtype = jnp.bfloat16      # halves DP grad-sync bytes (§Perf)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def split_micro(batch):
+        def r(x):
+            b = x.shape[0]
+            assert b % microbatches == 0, (b, microbatches)
+            return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+        return jax.tree.map(r, batch)
+
+    def train_step(params, opt_state, batch, placements=None):
+        if microbatches == 1:
+            (loss, loads), grads = grad_fn(params, batch, placements)
+        else:
+            micro = split_micro(batch)
+
+            # perf (flag-gated): mark per-microbatch grads 'unreduced' over
+            # the DP axes so the cross-data reduction happens ONCE after the
+            # scan instead of per microbatch (baseline: sync bytes scale with
+            # microbatch count).
+            defer = os.environ.get("REPRO_PERF_DEFER_GRAD_SYNC", "0") == "1"
+
+            def _unreduced(g):
+                from repro.sharding.ctx import current_mesh
+                from jax.sharding import NamedSharding, PartitionSpec as P
+                mesh = current_mesh()
+                if mesh is None:
+                    return g
+                dp = {a for a in ("pod", "data") if a in mesh.axis_names}
+                return jax.lax.with_sharding_constraint(
+                    g, NamedSharding(mesh, P(*([None] * g.ndim),
+                                             unreduced=dp)))
+
+            def accum(carry, mb):
+                g_acc, l_acc, ld_acc = carry
+                mb = jax.tree.map(
+                    lambda x: constrain(x, "dp", *([None] * (x.ndim - 1))), mb)
+                (loss, loads), grads = grad_fn(params, mb, placements)
+                if defer:
+                    grads = jax.tree.map(_unreduced, grads)
+                g_acc = jax.tree.map(
+                    lambda a, g: a + g.astype(accum_dtype), g_acc, grads)
+                ld_acc = ld_acc if loads is None else ld_acc + loads
+                return (g_acc, l_acc + loss, ld_acc), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, accum_dtype), params)
+            if defer:
+                g0 = jax.tree.map(_unreduced, g0)
+            ld0 = jnp.zeros((), jnp.float32) if not (
+                collect_moe and cfg.moe_experts) else jnp.zeros(
+                    (cfg.n_layers // cfg.pattern_period,
+                     sum(cfg.layer_is_moe(j)
+                         for j in range(cfg.pattern_period)),
+                     cfg.moe_experts), jnp.float32)
+            (grads, loss, loads), _ = jax.lax.scan(
+                accum, (g0, jnp.zeros((), jnp.float32), ld0), micro)
+            if defer:
+                from repro.sharding.ctx import current_mesh as _cm
+                from jax.sharding import NamedSharding as _NS, \
+                    PartitionSpec as _P
+                _mesh = _cm()
+                if _mesh is not None:
+                    grads = jax.tree.map(
+                        lambda g: jax.lax.with_sharding_constraint(
+                            g, _NS(_mesh, _P(*([None] * g.ndim)))), grads)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = loss / microbatches
+            if not (collect_moe and cfg.moe_experts):
+                loads = None
+
+        new_params, new_opt, om = opt_update(grads, opt_state, params, opt_cfg)
+        metrics: Dict[str, Any] = {"loss": loss, **om}
+        if loads is not None:
+            metrics["expert_load"] = loads
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_serve_step(cfg: ModelConfig, use_flash: bool = False,
+                    unroll: bool = False):
+    """Returns serve_step(params, cache, batch, index, placements) ->
+    (logits (B, T, V), new_cache). T=1 for decode, T=seq for prefill."""
+    from repro.models import forward, logits_from_hidden
+
+    def serve_step(params, cache, batch, index, placements=None):
+        hidden, new_cache = forward(params, cfg, batch, cache=cache,
+                                    cache_index=index, placements=placements,
+                                    use_flash=use_flash, remat=False,
+                                    unroll=unroll)
+        logits = logits_from_hidden(params, cfg, hidden[:, -1:, :])
+        return logits, new_cache
+
+    return serve_step

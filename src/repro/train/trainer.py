@@ -1,0 +1,152 @@
+"""Training loop: checkpoint/restart, straggler watchdog, SkewShield MoE
+placement updates, elastic-fleet hooks. CPU-runnable at smoke scale; the same
+loop drives the production mesh (the step function is mesh-agnostic)."""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model_schema, schema as schema_mod
+from repro.models.config import ModelConfig
+from repro.models.skewshield import (SkewShieldPlacer, permute_expert_params,
+                                     placements_array)
+
+from .checkpoint import CheckpointManager
+from .optimizer import OptConfig, opt_init
+from .train_step import make_train_step
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    checkpoint_every: int = 50
+    rebalance_every: int = 10          # SkewShield interval (steps)
+    microbatches: int = 1
+    log_every: int = 10
+    straggler_factor: float = 3.0      # step-time watchdog threshold
+    skewshield: bool = True
+    theta_max: float = 0.1
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, opt_cfg: OptConfig,
+                 tcfg: TrainerConfig, checkpoint_dir: str,
+                 data_fn: Callable[[int], Dict[str, jax.Array]],
+                 seed: int = 0):
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.data_fn = data_fn
+        self.schema = model_schema(cfg)
+        self.params = schema_mod.init(self.schema, jax.random.PRNGKey(seed))
+        self.opt_state = opt_init(self.params)
+        self.ckpt = CheckpointManager(checkpoint_dir)
+        self.step_fn = jax.jit(make_train_step(
+            cfg, opt_cfg, microbatches=tcfg.microbatches,
+            collect_moe=tcfg.skewshield and cfg.moe_experts > 0))
+        self.step = 0
+        self.history: List[Dict[str, float]] = []
+        self.step_times: List[float] = []
+        self.placers: List[SkewShieldPlacer] = []
+        self._moe_sub_names: List[str] = []
+        if cfg.moe_experts and tcfg.skewshield:
+            n_moe_layers = sum(cfg.layer_is_moe(j)
+                               for j in range(cfg.pattern_period)) \
+                * (cfg.n_layers // cfg.pattern_period)
+            bytes_per_expert = 3 * cfg.d_model * cfg.d_ff * 2.0
+            n_shards = min(cfg.moe_experts, 16)
+            # shards must divide experts for the slot layout
+            while cfg.moe_experts % n_shards:
+                n_shards -= 1
+            self.placers = [SkewShieldPlacer(cfg.moe_experts, n_shards,
+                                             bytes_per_expert,
+                                             theta_max=tcfg.theta_max)
+                            for _ in range(cfg.n_layers)]
+
+    # -------------------------------------------------------------- resume
+    def try_resume(self) -> bool:
+        like = {"params": self.params, "opt": self.opt_state}
+        try:
+            step, state, _ = self.ckpt.restore(like)
+        except (FileNotFoundError, ValueError):
+            return False
+        self.params, self.opt_state = state["params"], state["opt"]
+        self.step = step
+        return True
+
+    # ------------------------------------------------------------ main loop
+    def placements(self) -> Optional[jax.Array]:
+        if not self.placers:
+            return None
+        return placements_array(self.placers)
+
+    def run(self, steps: Optional[int] = None) -> List[Dict[str, float]]:
+        steps = steps if steps is not None else self.tcfg.total_steps
+        end = self.step + steps
+        while self.step < end:
+            batch = self.data_fn(self.step)
+            t0 = time.perf_counter()
+            self.params, self.opt_state, metrics = self.step_fn(
+                self.params, self.opt_state, batch, self.placements())
+            loss = float(metrics["loss"])
+            dt = time.perf_counter() - t0
+            self.step += 1
+            self.step_times.append(dt)
+            rec = {"step": self.step, "loss": loss,
+                   "grad_norm": float(metrics["grad_norm"]),
+                   "time_s": dt}
+            self.history.append(rec)
+            self._watchdog(dt)
+            if self.placers and self.step % self.tcfg.rebalance_every == 0 \
+                    and "expert_load" in metrics:
+                self._rebalance_experts(np.asarray(metrics["expert_load"]))
+            if self.step % self.tcfg.checkpoint_every == 0:
+                self.save()
+        return self.history
+
+    def save(self):
+        self.ckpt.save(self.step,
+                       {"params": self.params, "opt": self.opt_state},
+                       meta={"arch": self.cfg.name})
+
+    # -------------------------------------------------- fleet health hooks
+    def _watchdog(self, dt: float) -> None:
+        """Straggler detection: a step far beyond the trailing median flags a
+        slow worker; the balancer-level response (derate_worker) lives in the
+        controller — here we record the event for the ops plane."""
+        if len(self.step_times) < 8:
+            return
+        med = float(np.median(self.step_times[-8:]))
+        if dt > self.tcfg.straggler_factor * med:
+            self.history[-1]["straggler_suspect"] = True
+
+    # ----------------------------------------------------- SkewShield hook
+    def _rebalance_experts(self, expert_load: np.ndarray) -> None:
+        """expert_load: (n_groups, moe_per_group, E) accumulated loads."""
+        period = self.cfg.pattern_period
+        moe_js = [j for j in range(period) if self.cfg.layer_is_moe(j)]
+        n_groups = self.cfg.n_layers // period
+        flat_groups = self.params["groups"]
+        for g in range(n_groups):
+            for mi, j in enumerate(moe_js):
+                layer = g * period + j
+                placer = self.placers[layer]
+                old = placer.placement.copy()
+                upd = placer.update(expert_load[g, mi])
+                if len(upd.moved_experts):
+                    # weights AND optimizer moments move with the expert —
+                    # Adam state must stay aligned with its parameter.
+                    trees = [flat_groups[f"sub{j}"]["moe"]] + [
+                        self.opt_state[k]["groups"][f"sub{j}"]["moe"]
+                        for k in ("m", "v", "master")]
+                    for tree in trees:
+                        sliced = jax.tree.map(lambda a: a[g], tree)
+                        permd = permute_expert_params(sliced, old,
+                                                      upd.placement)
+                        for name in ("w_gate", "w_up", "w_down"):
+                            tree[name] = tree[name].at[g].set(permd[name])

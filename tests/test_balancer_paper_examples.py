@@ -1,0 +1,94 @@
+"""Exact reproduction of the paper's worked examples (Fig. 4 and Sec. III-A).
+
+Scenario: keys k1..k6 with costs [7,4,2,1,5,1]; two instances d1=0, d2=1;
+hash destinations h = [0,0,0,1,1,1]; initial routing table {k3->1, k5->0}
+(so initially d1 holds {k1,k2,k5}=16 and d2 holds {k3,k4,k6}=4);
+theta_max = 0 (absolute balance), mean load = 10.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.balancer import (Assignment, BalanceConfig, KeyStats, mintable,
+                                 metrics)
+from repro.core.balancer.hashing import ExplicitHash
+from repro.core.balancer.phased import run_phases, finish
+import time
+
+K1, K2, K3, K4, K5, K6 = 1, 2, 3, 4, 5, 6
+
+
+@pytest.fixture()
+def fig4():
+    stats = KeyStats(
+        keys=np.array([K1, K2, K3, K4, K5, K6]),
+        cost=np.array([7.0, 4.0, 2.0, 1.0, 5.0, 1.0]),
+        mem=np.array([7.0, 4.0, 2.0, 1.0, 5.0, 1.0]),  # w=1, S=c as in Sec. III-B
+    )
+    router = ExplicitHash({K1: 0, K2: 0, K3: 0, K4: 1, K5: 1, K6: 1}, n_dest=2)
+    assignment = Assignment(router, table={K3: 1, K5: 0})
+    config = BalanceConfig(theta_max=0.0, table_max=100)
+    return stats, assignment, config
+
+
+def test_initial_loads(fig4):
+    stats, assignment, _ = fig4
+    loads = metrics.loads(stats, assignment)
+    assert loads.tolist() == [16.0, 4.0]
+
+
+def test_llfd_left_example(fig4):
+    """Plain LLFD (no cleaning) ends perfectly balanced with a 4-entry table."""
+    stats, assignment, config = fig4
+    t0 = time.perf_counter()
+    ws = run_phases(stats, assignment, config, psi=stats.cost, clean_idxs=None)
+    res = finish(ws, assignment, config, t0)
+    assert res.loads.tolist() == [10.0, 10.0]
+    assert res.theta == 0.0
+    # paper narrative: k1->d2 (exchange {k3}), k3 fails on d1, stays d2
+    # (exchange {k4}), k4->d1; k5 keeps its table entry.
+    assert res.assignment.table == {K1: 1, K3: 1, K4: 0, K5: 0}
+    assert res.table_size == 4
+
+
+def test_llfd_narrative_steps(fig4):
+    """The internal trace matches Sec. III-A: E={k3} then E={k4}."""
+    stats, assignment, config = fig4
+    ws = run_phases(stats, assignment, config, psi=stats.cost, clean_idxs=None)
+    final = {int(k): int(d) for k, d in zip(stats.keys, ws.assign)}
+    assert final == {K1: 1, K2: 0, K3: 1, K4: 0, K5: 0, K6: 1}
+
+
+def test_mintable_right_example(fig4):
+    """MinTable cleans A first and reaches balance with only 2 entries."""
+    stats, assignment, config = fig4
+    res = mintable(stats, assignment, config)
+    assert res.loads.tolist() == [10.0, 10.0]
+    assert res.theta == 0.0
+    assert res.table_size == 2
+    assert res.assignment.table == {K2: 1, K4: 0}
+    # final placement is the partition d1={k1,k3,k4}, d2={k2,k5,k6}
+    dest = res.assignment.dest(stats.keys)
+    assert dest.tolist() == [0, 1, 0, 0, 1, 1]
+
+
+def test_mintable_cleaning_costs_more_migration(fig4):
+    """Fig. 4's tradeoff: MinTable's table is smaller, but it migrates more
+    state than plain LLFD starting from the existing table."""
+    stats, assignment, config = fig4
+    t0 = time.perf_counter()
+    ws = run_phases(stats, assignment, config, psi=stats.cost, clean_idxs=None)
+    res_llfd = finish(ws, assignment, config, t0)
+    res_mt = mintable(stats, assignment, config)
+    assert res_mt.table_size < res_llfd.table_size
+    assert res_mt.migration_cost >= res_llfd.migration_cost
+
+
+def test_gamma_example():
+    """Sec. III-B: beta=1 -> gamma(k1)=gamma(k2)=1; beta=0.5 -> k2 first."""
+    stats = KeyStats(keys=np.array([K1, K2]), cost=np.array([7.0, 4.0]),
+                     mem=np.array([7.0, 4.0]))
+    g1 = stats.gamma(1.0)
+    assert g1[0] == pytest.approx(1.0) and g1[1] == pytest.approx(1.0)
+    g05 = stats.gamma(0.5)
+    assert g05[1] > g05[0]

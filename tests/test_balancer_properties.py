@@ -1,0 +1,191 @@
+"""Property-based tests (hypothesis) for the balancer's invariants."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.balancer import (Assignment, BalanceConfig, KeyStats, ModHash,
+                                 metrics, mintable, minmig, mixed, mixed_bf,
+                                 simple, readj)
+from repro.streams.generator import WorkloadGen
+
+
+def make_stats(rng, k, heavy_tail=1.2):
+    cost = rng.pareto(heavy_tail, size=k) + 1.0
+    mem = rng.pareto(heavy_tail, size=k) + 1.0
+    return KeyStats(keys=np.arange(k, dtype=np.int64), cost=cost, mem=mem)
+
+
+@st.composite
+def instances(draw):
+    seed = draw(st.integers(0, 2**31 - 1))
+    k = draw(st.integers(8, 400))
+    n_dest = draw(st.integers(2, 12))
+    theta = draw(st.sampled_from([0.0, 0.02, 0.08, 0.3]))
+    rng = np.random.default_rng(seed)
+    stats = make_stats(rng, k)
+    assignment = Assignment(ModHash(n_dest, seed=seed % 7))
+    cfg = BalanceConfig(theta_max=theta, table_max=max(4, k // 4))
+    return stats, assignment, cfg
+
+
+@settings(max_examples=60, deadline=None)
+@given(instances())
+def test_result_consistency(inst):
+    """Loads, theta, migration cost and table reported by every algorithm are
+    internally consistent with the returned assignment function."""
+    stats, assignment, cfg = inst
+    for algo in (mintable, minmig, mixed):
+        res = algo(stats, assignment, cfg)
+        # reported loads match recomputation through the new assignment
+        re_loads = metrics.loads(stats, res.assignment)
+        np.testing.assert_allclose(re_loads, res.loads, rtol=1e-9)
+        assert res.theta == pytest.approx(metrics.theta(re_loads))
+        # migration cost matches Eq. 2 recomputed from Delta(F, F')
+        assert res.migration_cost == pytest.approx(
+            metrics.migration_cost(stats, assignment, res.assignment))
+        assert set(res.moved_keys.tolist()) == set(
+            metrics.moved_keys(stats, assignment, res.assignment).tolist())
+        # every table entry deviates from the hash destination
+        for key, d in res.assignment.table.items():
+            h = int(assignment.hash_router(np.array([key]))[0])
+            assert d != h
+        assert res.table_size == len(res.assignment.table)
+
+
+@settings(max_examples=40, deadline=None)
+@given(instances())
+def test_balance_reached_or_infeasible(inst):
+    """LLFD-based algorithms reach theta <= theta_max whenever any single key
+    is lighter than the remaining headroom (standard feasibility proxy)."""
+    stats, assignment, cfg = inst
+    mean = stats.cost.sum() / assignment.n_dest
+    res = mixed(stats, assignment, cfg)
+    if float(stats.cost.max()) <= cfg.theta_max * mean + mean:
+        # max key fits under L_max entirely on an empty instance -> feasible
+        # region is non-trivial; the heuristic must get within the Theorem-1
+        # style additive bound of the best case.
+        bound = max(cfg.theta_max, (1.0 / 3.0) * (1.0 - 1.0 / assignment.n_dest))
+        assert res.theta <= bound + 1e-6 or res.feasible_balance
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(2, 8), st.integers(2, 30))
+def test_theorem1_bound_with_perfect_assignment(seed, n_dest, per_dest):
+    """Theorem 1: when a perfect assignment exists and c(k1) < mean load,
+    LLFD's imbalance is <= 1/3 * (1 - 1/N_D)."""
+    rng = np.random.default_rng(seed)
+    target = 100.0
+    costs = []
+    for _ in range(n_dest):  # construct keys as compositions of equal sums
+        cuts = np.sort(rng.uniform(0, target, size=per_dest - 1))
+        parts = np.diff(np.concatenate([[0.0], cuts, [target]]))
+        costs.extend(parts.tolist())
+    costs = np.asarray(costs) + 1e-9
+    stats = KeyStats(keys=np.arange(len(costs), dtype=np.int64),
+                     cost=costs, mem=np.ones_like(costs))
+    mean = costs.sum() / n_dest
+    if costs.max() >= mean:
+        return  # theorem precondition violated
+    assignment = Assignment(ModHash(n_dest, seed=seed % 13))
+    bound = (1.0 / 3.0) * (1.0 - 1.0 / n_dest)
+    cfg = BalanceConfig(theta_max=bound, table_max=10**9)
+    res_simple = simple(stats, assignment, cfg)
+    assert res_simple.theta <= bound + 1e-9
+    res = mintable(stats, assignment, cfg)   # LLFD with full clean
+    assert res.theta <= bound + 1e-9
+
+
+@settings(max_examples=25, deadline=None)
+@given(instances())
+def test_theorem2_mixed_not_worse_than_simple(inst):
+    """Theorem 2/4: Mixed's balance status is not worse than Simple's."""
+    stats, assignment, cfg = inst
+    th_mixed = mixed(stats, assignment, cfg).theta
+    th_simple = simple(stats, assignment, cfg).theta
+    # 'Not worse' is judged on constraint satisfaction: Mixed stops at
+    # theta_max on purpose (it is *minimizing migration* subject to balance),
+    # so raw-theta comparison vs Simple's full rebuild is meaningless unless
+    # Simple satisfies the constraint and Mixed does not.
+    if th_simple <= cfg.theta_max:
+        assert th_mixed <= cfg.theta_max + 0.02
+    else:
+        assert th_mixed <= th_simple + 0.02
+
+
+@settings(max_examples=20, deadline=None)
+@given(instances())
+def test_mixed_first_trial_is_minmig(inst):
+    """Mixed starts at n=0 which is exactly MinMig; if that trial already
+    satisfies both constraints, the plans coincide."""
+    stats, assignment, cfg = inst
+    res_mm = minmig(stats, assignment, cfg)
+    res_mx = mixed(stats, assignment, cfg)
+    if res_mx.meta.get("trials", 1) == 1:
+        assert res_mx.migration_cost == pytest.approx(res_mm.migration_cost)
+        assert res_mx.table_size == res_mm.table_size
+
+
+def test_heuristic_spectrum_statistical():
+    """Paper Sec. III-C / Figs. 8-10: across skewed workloads, MinMig migrates
+    less state than MinTable, and MinTable ends with smaller tables. The claim
+    is statistical (it is about the heuristics' tendencies), so we average
+    over seeds on the paper's synthetic workload."""
+    mig_mm, mig_mt, tab_mm, tab_mt = [], [], [], []
+    for seed in range(8):
+        gen = WorkloadGen(k=800, z=0.85, f=0.8, seed=seed, window=2)
+        assignment = Assignment(ModHash(12, seed=seed))
+        cfg = BalanceConfig(theta_max=0.08, table_max=400)
+        stats0 = gen.interval(assignment, fluctuate=False)
+        warm = mixed(stats0, assignment, cfg)          # build up a table first
+        stats1 = gen.interval(warm.assignment)
+        res_mm = minmig(stats1, warm.assignment, cfg)
+        res_mt = mintable(stats1, warm.assignment, cfg)
+        mig_mm.append(res_mm.migration_cost)
+        mig_mt.append(res_mt.migration_cost)
+        tab_mm.append(res_mm.table_size)
+        tab_mt.append(res_mt.table_size)
+    assert np.mean(mig_mm) <= np.mean(mig_mt)
+    assert np.mean(tab_mt) <= np.mean(tab_mm)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_rebalance_loop_converges_under_fluctuation(seed):
+    """Driving intervals through the controller-style loop keeps theta bounded
+    (the paper's core end-to-end claim on synthetic data)."""
+    gen = WorkloadGen(k=500, z=0.9, f=0.5, seed=seed, window=2)
+    assignment = Assignment(ModHash(8, seed=1))
+    cfg = BalanceConfig(theta_max=0.08, table_max=200)
+    for i, stats in enumerate(gen.stream(assignment, 6)):
+        res = mixed(stats, assignment, cfg)
+        if res.feasible_balance:
+            assert res.theta <= cfg.theta_max + 1e-9
+        assignment = res.assignment
+
+
+def test_mixed_bf_not_worse_than_mixed():
+    rng = np.random.default_rng(7)
+    stats = make_stats(rng, 300)
+    assignment = Assignment(ModHash(6, seed=3))
+    cfg = BalanceConfig(theta_max=0.05, table_max=40)
+    # warm up: create a non-empty table first
+    res0 = mixed(stats, assignment, cfg)
+    stats2 = make_stats(np.random.default_rng(8), 300)
+    res_bf = mixed_bf(stats2, res0.assignment, cfg)
+    res_mx = mixed(stats2, res0.assignment, cfg)
+    assert (not res_bf.feasible_table, res_bf.migration_cost) <= \
+           (not res_mx.feasible_table, res_mx.migration_cost + 1e-9)
+
+
+def test_readj_slower_than_mixed_on_many_keys():
+    """The complexity claim behind Fig. 12: Readj's pairwise search scales
+    worse than Mixed's heuristic on skewed key sets."""
+    gen = WorkloadGen(k=3000, z=1.0, f=0.0, seed=0)
+    assignment = Assignment(ModHash(10, seed=0))
+    stats = gen.interval(assignment, fluctuate=False)
+    cfg = BalanceConfig(theta_max=0.08, table_max=1000)
+    res_mx = mixed(stats, assignment, cfg)
+    res_rj = readj(stats, assignment, cfg, sigma=0.001)
+    assert res_mx.plan_time_s < res_rj.plan_time_s * 5  # mixed never blows up
+    assert res_mx.theta <= max(res_rj.theta, cfg.theta_max) + 1e-9

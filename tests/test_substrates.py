@@ -1,0 +1,206 @@
+"""Integration tests: SkewShield MoE placement, keyed data pipeline, serving
+engine, checkpointing, and the trainer loop (smoke scale, CPU)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import smoke_config
+from repro.data.pipeline import KeyedDataPipeline, zipf_sources
+from repro.models import forward, model_schema, schema
+from repro.models.moe import moe
+from repro.models.skewshield import (SkewShieldPlacer, permute_expert_params,
+                                     placements_array)
+from repro.serve.engine import ServeEngine
+from repro.train.checkpoint import CheckpointManager
+from repro.train.optimizer import OptConfig, opt_init, opt_update
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+# ------------------------------------------------------------- skewshield --
+def test_skewshield_balances_hot_experts():
+    placer = SkewShieldPlacer(n_experts=16, n_shards=4,
+                              bytes_per_expert=1e6, theta_max=0.1)
+    load = np.ones(16)
+    load[0] = 20.0                       # one hot expert on shard 0
+    load[1] = 15.0                       # and another
+    upd = placer.update(load)
+    assert upd.theta_after < upd.theta_before
+    # slot-count constraint: every shard holds exactly 4 experts
+    shards = placer.current_shards()
+    assert np.bincount(shards, minlength=4).tolist() == [4, 4, 4, 4]
+
+
+def test_skewshield_migration_is_minimal_when_balanced():
+    placer = SkewShieldPlacer(16, 4, 1e6, theta_max=0.2)
+    upd = placer.update(np.ones(16))
+    assert len(upd.moved_experts) == 0
+    assert np.array_equal(placer.placement, np.arange(16))
+
+
+def test_skewshield_placement_preserves_moe_semantics():
+    """Permuting placement + weights together leaves the layer function
+    unchanged (non-split-key semantics on TPU)."""
+    cfg = smoke_config("dbrx_132b")
+    sch = model_schema(cfg)
+    params = schema.init(sch, jax.random.PRNGKey(0))
+    p = jax.tree.map(lambda a: a[0], params["groups"]["sub0"]["moe"])
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((2, 8, cfg.d_model)),
+                    jnp.float32)
+    identity = np.arange(cfg.moe_experts, dtype=np.int32)
+    out_base = moe(p, cfg, x, placement=jnp.asarray(identity))
+    # move expert 0 <-> expert 2 (same shard size irrelevant here)
+    new_place = identity.copy()
+    new_place[[0, 2]] = new_place[[2, 0]]
+    p2 = permute_expert_params(p, identity, new_place)
+    out_perm = moe(p2, cfg, x, placement=jnp.asarray(new_place))
+    np.testing.assert_allclose(np.asarray(out_base, np.float32),
+                               np.asarray(out_perm, np.float32),
+                               atol=2e-2)
+
+
+def test_skewshield_repeated_updates_converge():
+    # feasible regime: hottest expert stays below the mean shard load
+    # (with a heavier tail the slot-count constraint pins theta at the
+    # oversized-expert bound and no placement can fix it)
+    rng = np.random.default_rng(0)
+    placer = SkewShieldPlacer(40, 8, 1e6, theta_max=0.15)
+    thetas = []
+    load = rng.uniform(0.5, 2.0, 40)
+    load[:3] = 4.0                                # hot but < total/8 ~ 6.3
+    for _ in range(5):
+        upd = placer.update(load)
+        thetas.append(upd.theta_after)
+        load = load * rng.uniform(0.9, 1.1, 40)   # mild drift
+    # steady state: every interval ends within tolerance (+ drift slack);
+    # the controller correctly does NOT re-trigger while under theta_max.
+    assert all(t < 0.15 + 0.1 for t in thetas)
+    assert thetas[-1] < 0.15
+
+
+# ---------------------------------------------------------------- pipeline --
+def test_pipeline_balances_worker_tokens():
+    pipe = KeyedDataPipeline(zipf_sources(200, z=1.1), n_workers=8,
+                             seq_len=64, vocab=1000, theta_max=0.1)
+    loads = []
+    for i in range(6):
+        if i == 3:
+            pipe.drift(magnitude=1.0)
+        loads.append(pipe.run_interval(n_docs=400))
+    first = loads[0]
+    last = loads[-1]
+    skew_first = first.max() / first.mean()
+    skew_last = last.max() / last.mean()
+    assert skew_last < max(skew_first, 1.6)
+    b = pipe.worker_batch(0, batch=2)
+    assert b is not None and b["tokens"].shape == (2, 64)
+    assert np.array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_pipeline_checkpoint_roundtrip(tmp_path):
+    pipe = KeyedDataPipeline(zipf_sources(50), n_workers=4, seq_len=32,
+                             vocab=500)
+    pipe.run_interval(200)
+    state = pipe.state_dict()
+    pipe2 = KeyedDataPipeline(zipf_sources(50), n_workers=4, seq_len=32,
+                              vocab=500)
+    pipe2.load_state(state)
+    # identical continuation
+    a = pipe.run_interval(100)
+    b = pipe2.run_interval(100)
+    np.testing.assert_array_equal(a, b)
+
+
+# ------------------------------------------------------------------ serve --
+def test_serve_engine_rebalances_hot_sessions():
+    rng = np.random.default_rng(1)
+    eng = ServeEngine(n_replicas=8, theta_max=0.1)
+    hot = [1, 2, 3]                       # heavy agent sessions
+    thetas = []
+    for i in range(8):
+        reqs = []
+        for sid in hot:
+            reqs.append((sid, 512, 1024))
+        for _ in range(60):
+            reqs.append((int(rng.integers(10, 500)), 128, 64))
+        rep = eng.run_interval(reqs)
+        thetas.append(rep.theta)
+    assert np.mean(thetas[4:]) < np.mean(thetas[:2]) + 1e-9
+    assert any(r.migrated_sessions > 0 for r in eng.reports)
+    # each session's state lives on exactly one replica
+    assert set(eng.location) >= set(eng.sessions)
+
+
+def test_serve_engine_evicts_idle_sessions():
+    eng = ServeEngine(n_replicas=2, window=2)
+    eng.run_interval([(7, 100, 10)])
+    for _ in range(3):
+        eng.run_interval([(8, 10, 1)])
+    assert 7 not in eng.sessions
+
+
+# ------------------------------------------------------------- checkpoint --
+def test_checkpoint_roundtrip_and_latest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    state = {"w": jnp.arange(8, dtype=jnp.bfloat16),
+             "n": {"m": jnp.ones((3, 3), jnp.float32)}}
+    mgr.save(10, state)
+    state2 = jax.tree.map(lambda x: x * 2, state)
+    mgr.save(20, state2)
+    step, restored, _ = mgr.restore(state)
+    assert step == 20
+    np.testing.assert_array_equal(np.asarray(restored["w"], np.float32),
+                                  np.asarray(state2["w"], np.float32))
+
+
+def test_checkpoint_gc_and_structure_check(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=1)
+    state = {"a": jnp.zeros(4)}
+    mgr.save(1, state)
+    mgr.save(2, state)
+    assert mgr.latest_step() == 2
+    assert not (tmp_path / "step_00000001").exists()
+    with pytest.raises(ValueError):
+        mgr.restore({"b": jnp.zeros(4)})
+
+
+# ---------------------------------------------------------------- trainer --
+def _toy_data(cfg, batch=2, seq=16):
+    def data_fn(step):
+        rng = np.random.default_rng(step)
+        toks = rng.integers(0, cfg.vocab, (batch, seq + 1)).astype(np.int32)
+        return {"tokens": jnp.asarray(toks[:, :-1]),
+                "labels": jnp.asarray(toks[:, 1:])}
+    return data_fn
+
+
+def test_trainer_loss_decreases_and_resumes(tmp_path):
+    cfg = smoke_config("granite_8b")
+    tcfg = TrainerConfig(total_steps=8, checkpoint_every=4, log_every=100,
+                         skewshield=False)
+    tr = Trainer(cfg, OptConfig(lr=1e-2, warmup_steps=2), tcfg,
+                 str(tmp_path), _toy_data(cfg))
+    hist = tr.run(8)
+    assert hist[-1]["loss"] < hist[0]["loss"]
+    # crash/restart: a new trainer resumes from step 8
+    tr2 = Trainer(cfg, OptConfig(lr=1e-2, warmup_steps=2), tcfg,
+                  str(tmp_path), _toy_data(cfg))
+    assert tr2.try_resume()
+    assert tr2.step == 8
+    np.testing.assert_allclose(
+        np.asarray(jax.tree.leaves(tr2.params)[0], np.float32),
+        np.asarray(jax.tree.leaves(tr.params)[0], np.float32))
+
+
+def test_trainer_moe_skewshield_loop(tmp_path):
+    cfg = smoke_config("granite_moe_3b_a800m")
+    tcfg = TrainerConfig(total_steps=6, checkpoint_every=100,
+                         rebalance_every=2, skewshield=True, theta_max=0.2)
+    tr = Trainer(cfg, OptConfig(lr=5e-3, warmup_steps=2), tcfg,
+                 str(tmp_path), _toy_data(cfg))
+    hist = tr.run(6)
+    assert np.isfinite(hist[-1]["loss"])
+    assert tr.placements() is not None
+    # loss still finite after any expert migrations
+    assert hist[-1]["loss"] < hist[0]["loss"] * 1.5
