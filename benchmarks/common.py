@@ -49,21 +49,27 @@ def workload(k=10_000, z=0.85, f=1.0, n_dest=15, seed=0, window=1,
 
 def stage_throughput(operator, algorithm, theta_max, gen_kwargs,
                      intervals=5, tuples_per_interval=20_000, table_max=3000,
-                     window=2, n_tasks=10, seed=0):
+                     window=2, n_tasks=10, seed=0, vectorized=True):
     """Drive the stream engine; return (mean throughput, mean latency proxy,
-    mean skewness) over the steady-state intervals."""
+    mean skewness) over the steady-state intervals.
+
+    Uses the array-native ``process_interval_arrays`` entry point so the
+    figures measure the engine, not tuple-list construction; pass
+    ``vectorized=False`` to benchmark the per-tuple reference loop instead
+    (see ``benchmarks/engine_fastpath.py`` for the A/B comparison)."""
     gen = WorkloadGen(seed=seed, window=window, **gen_kwargs)
     controller = RebalanceController(
         Assignment(ModHash(n_tasks, seed=seed)),
         BalanceConfig(theta_max=theta_max, table_max=table_max,
                       window=window),
         algorithm=algorithm)
-    stage = KeyedStage(operator, controller, window=window)
+    stage = KeyedStage(operator, controller, window=window,
+                       vectorized=vectorized)
     for i in range(intervals):
         if i > 0:
             gen.interval(stage.controller.assignment)
-        keys = gen.draw_tuples(tuples_per_interval)
-        stage.process_interval([(int(kk), i) for kk in keys])
+        keys = gen.draw_tuples(tuples_per_interval).astype(np.int64)
+        stage.process_interval_arrays(keys, np.full(tuples_per_interval, i))
     reps = stage.reports[1:]
     thr = float(np.mean([r.throughput for r in reps]))
     lat = float(np.mean([r.makespan + r.migration_stall for r in reps]))

@@ -7,9 +7,21 @@ import numpy as np
 from .types import Assignment, KeyStats
 
 
+def segment_sum(values: np.ndarray, segment_ids: np.ndarray,
+                n_segments: int) -> np.ndarray:
+    """Sum ``values`` into ``n_segments`` buckets keyed by ``segment_ids``.
+
+    The host-side twin of the device segment-sums (``kernels.key_stats``):
+    the vectorized engine and the load computation below both reduce
+    per-key quantities to per-task aggregates through this one primitive.
+    """
+    return np.bincount(segment_ids, weights=values,
+                       minlength=n_segments).astype(np.float64)
+
+
 def loads_for(stats: KeyStats, dests: np.ndarray, n_dest: int) -> np.ndarray:
     """L(d) = sum of c(k) over keys assigned to d."""
-    return np.bincount(dests, weights=stats.cost, minlength=n_dest).astype(np.float64)
+    return segment_sum(stats.cost, dests, n_dest)
 
 
 def loads(stats: KeyStats, assignment: Assignment) -> np.ndarray:

@@ -18,7 +18,6 @@ Protocol per interval (paper's numbered steps):
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Callable, List, Optional
 
 import numpy as np
@@ -68,6 +67,21 @@ class RebalanceController:
     def should_trigger(self, stats: KeyStats) -> bool:
         loads = metrics.loads(stats, self.assignment)
         return metrics.theta(loads) > self.config.theta_max
+
+    # -- paper step 1: array-native measurement handoff -----------------------
+    def observe(self, keys: np.ndarray, cost: np.ndarray, mem: np.ndarray,
+                freq: Optional[np.ndarray] = None,
+                force: bool = False) -> ControllerEvent:
+        """Ingest pre-aggregated per-key arrays and run one protocol round.
+
+        This is the vectorized engine's entry point (and the natural one for
+        any substrate whose workers already aggregate on-device, e.g. the
+        ``key_stats`` Pallas kernel): callers hand over ``c(k)``/``S(k,w)``/
+        ``g(k)`` arrays directly instead of building a :class:`KeyStats`
+        themselves. Equivalent to ``on_interval(KeyStats(...), force)``.
+        """
+        return self.on_interval(
+            KeyStats(keys=keys, cost=cost, mem=mem, freq=freq), force=force)
 
     # -- paper steps 2-7 ------------------------------------------------------
     def on_interval(self, stats: KeyStats, force: bool = False) -> ControllerEvent:

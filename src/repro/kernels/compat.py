@@ -1,0 +1,14 @@
+"""Version compatibility shims for Pallas TPU APIs.
+
+``jax.experimental.pallas.tpu`` renamed ``TPUCompilerParams`` to
+``CompilerParams`` around jax 0.5; the kernels in this package are written
+against the new name and resolve it through :data:`CompilerParams` here so
+they load on both sides of the rename.
+"""
+
+from __future__ import annotations
+
+import jax.experimental.pallas.tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    pltpu.TPUCompilerParams

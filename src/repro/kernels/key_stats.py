@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from .compat import CompilerParams
+
 
 def _key_stats_kernel(keys_ref, costs_ref, freq_ref, cost_ref, *, block_k: int):
     n_idx = pl.program_id(1)
@@ -79,7 +81,7 @@ def key_stats(keys: jax.Array, costs: jax.Array, num_keys: int,
             jax.ShapeDtypeStruct((1, padded_k), jnp.float32),
             jax.ShapeDtypeStruct((1, padded_k), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(keys_p, costs_p)

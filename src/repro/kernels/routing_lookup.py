@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from .compat import CompilerParams
+
 
 def _fmix32(h):
     h = h ^ (h >> jnp.uint32(16))
@@ -73,7 +75,7 @@ def routing_lookup(keys: jax.Array, table_keys: jax.Array,
         ],
         out_specs=pl.BlockSpec((1, block_n), lambda i: (0, i)),
         out_shape=jax.ShapeDtypeStruct((1, keys_p.shape[1]), jnp.int32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(keys_p, tkeys_p, tdests_p)

@@ -1,13 +1,14 @@
 """Faithful stream-processing substrate: engine, operators, state, generator."""
 
-from .engine import IntervalReport, KeyedStage
+from .engine import SUBSTRATES, IntervalReport, KeyedStage
 from .generator import WorkloadGen, zipf_frequencies
-from .operators import (MergeCounts, Operator, PartialWordCount, WindowedSelfJoin,
-                        WordCount)
+from .operators import (BatchResult, MergeCounts, Operator, PartialWordCount,
+                        WindowedSelfJoin, WordCount)
 from .state import KeyState, TaskStateStore
 
 __all__ = [
-    "IntervalReport", "KeyedStage", "WorkloadGen", "zipf_frequencies",
-    "MergeCounts", "Operator", "PartialWordCount", "WindowedSelfJoin",
-    "WordCount", "KeyState", "TaskStateStore",
+    "SUBSTRATES", "IntervalReport", "KeyedStage", "WorkloadGen",
+    "zipf_frequencies", "BatchResult", "MergeCounts", "Operator",
+    "PartialWordCount", "WindowedSelfJoin", "WordCount", "KeyState",
+    "TaskStateStore",
 ]

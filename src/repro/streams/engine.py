@@ -14,21 +14,49 @@ The engine also produces the performance model used by the benchmarks:
 interval makespan = max per-task cost + migration stall, so throughput =
 tuples / makespan (relative units; the paper measures the same shape of
 quantity on Storm).
+
+Vectorized fast path (default)
+------------------------------
+``KeyedStage(vectorized=True)`` dispatches whole micro-batches at a time:
+one ``Assignment.dest`` call per interval, argsort + segment boundaries to
+partition tuples per task, ``Operator.process_batch`` per segment, and
+``np.add.at`` segment-sums for the per-key cost/freq/state-size stats of
+protocol step 1 (see :mod:`repro.streams.operators` for the batched operator
+contract and :mod:`repro.streams.state` for the batched store API).
+``vectorized=False`` keeps the original per-tuple loop as the reference
+implementation; ``tests/test_engine_parity.py`` proves the two produce
+identical :class:`IntervalReport` streams, and
+``benchmarks/engine_fastpath.py`` measures the speedup.
+
+Substrate flag
+--------------
+``substrate="numpy"`` (default) computes routing and stats on host numpy.
+``substrate="pallas"`` runs routing through the Pallas mixed-dispatch kernel
+(:mod:`repro.kernels.routing_lookup`) and step-1 stats aggregation through
+the fused histogram kernel (:mod:`repro.kernels.key_stats`), with the numpy
+path as the reference semantics. Requirements: the assignment's hash router
+must be :class:`repro.core.balancer.hashing.Hash32` (the device-canonical
+fmix32 hash — ``ModHash`` uses splitmix64, which the kernels do not
+implement) and key ids must fit int32. Stats come back float32, so reports
+match numpy to ~1e-6 relative rather than bit-for-bit. See
+``docs/architecture.md`` ("Kernels") for when to flip this flag.
 """
 
 from __future__ import annotations
 
 import dataclasses
 from collections import defaultdict
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.balancer import Assignment, BalanceConfig, KeyStats, metrics
+from repro.core.balancer import Assignment, KeyStats, metrics
 from repro.core.controller import RebalanceController
 
 from .operators import Operator
 from .state import TaskStateStore
+
+SUBSTRATES = ("numpy", "pallas")
 
 
 @dataclasses.dataclass
@@ -48,11 +76,26 @@ class IntervalReport:
 
 
 class KeyedStage:
-    """N_D task instances + controller-owned assignment (one logical operator)."""
+    """N_D task instances + controller-owned assignment (one logical operator).
+
+    Args:
+      vectorized: use the array-at-a-time fast path (default). ``False``
+        selects the per-tuple reference loop — same results, ~10x slower;
+        kept for parity testing and as executable documentation.
+      substrate: ``"numpy"`` or ``"pallas"`` — see the module docstring.
+      stats_dense_max: in the pallas substrate, the stats histogram kernel
+        needs a dense key domain; domains larger than this fall back to the
+        numpy segment-sum for step 1 (routing stays on the kernel).
+    """
 
     def __init__(self, operator: Operator, controller: RebalanceController,
                  window: int = 1, migration_bandwidth: float = 1e6,
-                 micro_batches: int = 8, migration_batches: int = 2):
+                 micro_batches: int = 8, migration_batches: int = 2,
+                 vectorized: bool = True, substrate: str = "numpy",
+                 stats_dense_max: int = 1 << 20):
+        if substrate not in SUBSTRATES:
+            raise ValueError(f"unknown substrate {substrate!r}; "
+                             f"choose from {SUBSTRATES}")
         self.operator = operator
         self.controller = controller
         self.window = window
@@ -61,86 +104,250 @@ class KeyedStage:
         self.migration_bandwidth = migration_bandwidth
         self.micro_batches = micro_batches
         self.migration_batches = migration_batches
+        self.vectorized = vectorized
+        self.substrate = substrate
+        self.stats_dense_max = stats_dense_max
         self.reports: List[IntervalReport] = []
         self.outputs: Dict[int, Any] = {}
         self.emitted_sum = 0.0                      # running sum of numeric emits
         self.last_stats: Optional[KeyStats] = None
         self._interval = 0
         self._pending_delta: Optional[set] = None   # keys paused this interval
+        self._pending_delta_arr: Optional[np.ndarray] = None
         self._migrated_bytes_pending = 0.0
         self._plan_time_pending = 0.0
+        if substrate == "pallas":
+            self._init_pallas()
         # wire the migration executor (paper steps 5-6)
         self.controller.executor = self._migrate
+
+    def _init_pallas(self) -> None:
+        from repro.core.balancer.hashing import Hash32
+        router = self.controller.assignment.hash_router
+        if not isinstance(router, Hash32):
+            raise ValueError(
+                "substrate='pallas' requires a Hash32 router (device-"
+                f"canonical fmix32); got {type(router).__name__}. ModHash's "
+                "splitmix64 has no 32-bit kernel equivalent.")
+        import jax.numpy as jnp                       # lazy: numpy path stays jax-free
+        from repro.kernels.key_stats import key_stats
+        from repro.kernels.routing_lookup import routing_lookup
+        self._jnp = jnp
+        self._kernel_route = routing_lookup
+        self._kernel_stats = key_stats
+        self._hash_seed = router.seed
 
     # -- state migration: move KeyState between stores -------------------------
     def _migrate(self, moved_keys: np.ndarray, old: Assignment,
                  new: Assignment) -> None:
-        keys = [int(k) for k in moved_keys]
-        src = old.dest(np.asarray(keys, dtype=np.int64))
-        dst = new.dest(np.asarray(keys, dtype=np.int64))
-        by_src: Dict[int, List[int]] = defaultdict(list)
-        for k, s, d in zip(keys, src, dst):
-            if s != d:
-                by_src[int(s)].append(k)
+        """Executor for protocol steps 5-6, array-at-a-time: one dest() call
+        per assignment, group-by-source extraction (`extract_many`), then
+        group-by-destination installs."""
+        keys = np.asarray(moved_keys, dtype=np.int64)
+        src = old.dest(keys)
+        dst = new.dest(keys)
+        moving = src != dst
+        mkeys, msrc, mdst = keys[moving], src[moving], dst[moving]
         total = 0.0
-        extracted: Dict[int, Dict] = {}
-        for s, ks in by_src.items():
-            total += self.stores[s].migrated_bytes(ks)
-            extracted.update(self.stores[s].extract(ks))
-        for k, state in extracted.items():
-            d = int(new.dest(np.asarray([k], dtype=np.int64))[0])
-            self.stores[d].install({k: state})
+        extracted: Dict[int, Any] = {}
+        for s in np.unique(msrc):
+            sel = mkeys[msrc == s].tolist()
+            total += self.stores[int(s)].migrated_bytes(sel)
+            extracted.update(self.stores[int(s)].extract_many(
+                np.asarray(sel, dtype=np.int64)))
+        for d in np.unique(mdst):
+            batch = {int(k): extracted[int(k)] for k in mkeys[mdst == d]
+                     if int(k) in extracted}
+            if batch:
+                self.stores[int(d)].install_many(batch)
         self._migrated_bytes_pending += total
-        self._pending_delta = set(keys)
+        # the reference loop materializes the membership set lazily; the
+        # vectorized path only ever consults the array (np.isin)
+        self._pending_delta = None
+        self._pending_delta_arr = keys
 
     # -- one interval of traffic ------------------------------------------------
-    def process_interval(self, tuples: List[Tuple[int, Any]]) -> IntervalReport:
+    def process_interval(self, tuples: Sequence[Tuple[int, Any]]) -> IntervalReport:
+        """Process one interval given ``(key, value)`` tuples (list API)."""
+        keys = np.fromiter((k for k, _ in tuples), dtype=np.int64,
+                           count=len(tuples))
+        values = [v for _, v in tuples]
+        return self.process_interval_arrays(keys, values)
+
+    def process_interval_arrays(self, keys: np.ndarray,
+                                values: Optional[Sequence[Any]] = None
+                                ) -> IntervalReport:
+        """Array-native entry point: ``keys`` as int64 array, ``values`` as an
+        aligned sequence (or None when the operator sets ``needs_values``
+        False). This is the zero-conversion path used by the benchmarks."""
+        if not self.vectorized:
+            return self._process_interval_reference(keys, values)
         self._interval += 1
         iv = self._interval
-        n = len(tuples)
+        n = int(keys.shape[0])
         task_cost = np.zeros(self.n_tasks)
-        key_cost: Dict[int, float] = defaultdict(float)
-        key_freq: Dict[int, float] = defaultdict(float)
-        buffer: List[Tuple[int, Any]] = []
+        acc_keys: List[np.ndarray] = []
+        acc_cost: List[np.ndarray] = []
+        acc_freq: List[np.ndarray] = []
         buffered_count = 0
 
-        keys_arr = np.asarray([k for k, _ in tuples], dtype=np.int64)
-        dests = self.controller.assignment.dest(keys_arr) if n else np.zeros(0, int)
+        dests = self._dest_batch(keys) if n else np.zeros(0, np.int64)
 
-        batch_edges = np.linspace(0, n, self.micro_batches + 1).astype(int)
-        for b in range(self.micro_batches):
-            lo, hi = batch_edges[b], batch_edges[b + 1]
-            migrating = (self._pending_delta is not None
-                         and b < self.migration_batches)
-            if not migrating and buffer:
-                # Resume: replay buffered tuples with the CURRENT assignment
-                for k, v in buffer:
-                    d = int(self.controller.assignment.dest(
-                        np.asarray([k], dtype=np.int64))[0])
-                    self._run_one(d, iv, k, v, task_cost, key_cost, key_freq)
-                buffer.clear()
-                self._pending_delta = None
-            for i in range(lo, hi):
-                k, v = tuples[i]
-                if migrating and k in self._pending_delta:
-                    buffer.append((k, v))           # Pause: cache locally
-                    buffered_count += 1
-                    continue
-                self._run_one(int(dests[i]), iv, k, v, task_cost, key_cost,
-                              key_freq)
-        if buffer:                                   # traffic ended mid-pause
-            for k, v in buffer:
-                d = int(self.controller.assignment.dest(
-                    np.asarray([k], dtype=np.int64))[0])
-                self._run_one(d, iv, k, v, task_cost, key_cost, key_freq)
-            buffer.clear()
+        # Micro-batch boundaries are only *observable* through the pause
+        # window: the first `migration_batches` of `micro_batches` slices
+        # buffer Delta-keys while migration is in flight. Outside that
+        # window the batched operators are batch-boundary-invariant (their
+        # per-key closed forms telescope — see operators.py), so the engine
+        # coalesces the interval into at most two macro-dispatches:
+        #   A. the pause window, with Delta-keys masked out and buffered;
+        #   B. Resume — buffered tuples replayed (CURRENT assignment, which
+        #      equals `dests` since F only changes at interval boundaries)
+        #      followed by the rest of the stream.
+        if n and self._pending_delta_arr is not None:
+            edges = np.linspace(0, n, self.micro_batches + 1).astype(int)
+            pause_hi = edges[min(self.migration_batches, self.micro_batches)]
+            head = np.arange(pause_hi)
+            paused = np.isin(keys[:pause_hi], self._pending_delta_arr)
+            buffered_count = int(paused.sum())
+            kept = head[~paused]
+            if kept.size:
+                self._process_batch(iv, keys[kept], dests[kept], kept, values,
+                                    task_cost, acc_keys, acc_cost, acc_freq)
+            resume = np.concatenate([head[paused], np.arange(pause_hi, n)])
+            if resume.size:
+                self._process_batch(iv, keys[resume], dests[resume], resume,
+                                    values, task_cost, acc_keys, acc_cost,
+                                    acc_freq)
+        elif n:
+            idx = np.arange(n)
+            self._process_batch(iv, keys, dests, idx, values, task_cost,
+                                acc_keys, acc_cost, acc_freq)
         self._pending_delta = None
+        self._pending_delta_arr = None
 
-        for store in self.stores:
-            store.end_interval(iv)
+        held = [store.end_interval_collect(iv) for store in self.stores]
 
+        stats = self._collect_stats_vectorized(acc_keys, acc_cost, acc_freq,
+                                               held)
+        return self._finish_interval(iv, n, task_cost, buffered_count, stats)
+
+    def _process_batch(self, iv: int, bkeys: np.ndarray, bdests: np.ndarray,
+                       abs_idx: np.ndarray, values: Optional[Sequence[Any]],
+                       task_cost, acc_keys, acc_cost, acc_freq) -> None:
+        """Partition one micro-batch per task via argsort + segment boundaries
+        and hand each segment to the operator's batched kernel."""
+        order = np.argsort(bdests, kind="stable")
+        sorted_dests = bdests[order]
+        bounds = np.searchsorted(sorted_dests, np.arange(self.n_tasks + 1))
+        needs_values = self.operator.needs_values
+        values_arr = values if isinstance(values, np.ndarray) else None
+        for d in range(self.n_tasks):
+            s0, s1 = bounds[d], bounds[d + 1]
+            if s0 == s1:
+                continue
+            seg = order[s0:s1]
+            kseg = bkeys[seg]
+            vseg: Optional[Sequence[Any]] = None
+            if needs_values:
+                if values is None:
+                    # match the reference path: absent payloads flow as None
+                    vseg = [None] * len(seg)
+                elif values_arr is not None:
+                    vseg = values_arr[abs_idx[seg]]
+                else:
+                    vseg = [values[i] for i in abs_idx[seg]]
+            res = self.operator.process_batch(self.stores[d], iv, kseg, vseg)
+            task_cost[d] += res.task_cost
+            acc_keys.append(res.uniq_keys)
+            acc_cost.append(res.key_cost)
+            acc_freq.append(res.key_freq)
+            for ok, ov in res.outputs:
+                self.outputs[ok] = ov
+            self.emitted_sum += res.emit_sum
+
+    def _dest_batch(self, keys: np.ndarray) -> np.ndarray:
+        """F(k) for a key batch — numpy Assignment.dest or the Pallas kernel."""
+        if self.substrate == "pallas" and keys.size:
+            if int(keys.max()) > np.iinfo(np.int32).max or int(keys.min()) < 0:
+                raise ValueError(
+                    "substrate='pallas' requires key ids in [0, 2^31): the "
+                    "routing kernel operates on int32 and larger ids would "
+                    "silently alias")
+            assignment = self.controller.assignment
+            # pad the table to a stable capacity (next power of two, >= 128):
+            # routing_lookup is jitted on the table shape, so size-exact
+            # padding would retrace on every rebalance that resizes the table
+            a_max = max(128, 1 << max(0, assignment.table_size - 1).bit_length())
+            tk, td = assignment.table_arrays(a_max)
+            out = self._kernel_route(
+                self._jnp.asarray(keys.astype(np.int32)),
+                self._jnp.asarray(tk.astype(np.int32)),
+                self._jnp.asarray(td.astype(np.int32)),
+                assignment.n_dest, seed=self._hash_seed)
+            return np.asarray(out).astype(np.int64)
+        return self.controller.assignment.dest(keys)
+
+    # -- stats collection (paper Fig. 5 step 1), segment-sum form --------------
+    def _collect_stats_vectorized(self, acc_keys, acc_cost, acc_freq,
+                                  held) -> Optional[KeyStats]:
+        # The stat universe is (keys seen this interval) UNION (keys still
+        # holding window state): omitting quiet stateful keys would let a
+        # table cleanup strand their state on the old task.
+        seen = (np.concatenate(acc_keys) if acc_keys
+                else np.zeros(0, np.int64))
+        cost_parts = (np.concatenate(acc_cost) if acc_cost
+                      else np.zeros(0, np.float64))
+        freq_parts = (np.concatenate(acc_freq) if acc_freq
+                      else np.zeros(0, np.float64))
+        held_keys = np.concatenate([h[0] for h in held]) if held else \
+            np.zeros(0, np.int64)
+        held_sizes = np.concatenate([h[1] for h in held]) if held else \
+            np.zeros(0, np.float64)
+        universe = np.union1d(seen, held_keys)
+        if not universe.size:
+            return None
+        if (self.substrate == "pallas" and seen.size
+                and int(universe.max()) < self.stats_dense_max
+                and int(universe.min()) >= 0):
+            return self._collect_stats_pallas(seen, cost_parts, freq_parts,
+                                              held_keys, held_sizes)
+        pos = np.searchsorted(universe, seen)
+        cost = metrics.segment_sum(cost_parts, pos, universe.size)
+        freq = metrics.segment_sum(freq_parts, pos, universe.size)
+        mem = metrics.segment_sum(held_sizes,
+                                  np.searchsorted(universe, held_keys),
+                                  universe.size)
+        return KeyStats(keys=universe, cost=cost, mem=mem, freq=freq)
+
+    def _collect_stats_pallas(self, seen, cost_parts, freq_parts, held_keys,
+                              held_sizes) -> KeyStats:
+        """Step-1 stats via the fused histogram kernel over a dense domain.
+
+        The kernel is a weighted segment-sum (one-hot matmul on the MXU), so
+        two passes — weights = per-key cost, weights = per-key freq — yield
+        c(k) and g(k). Accumulation is float32 on-device; reports therefore
+        match the numpy path to ~1e-6 relative, not bit-for-bit."""
+        jnp = self._jnp
+        num = int(max(seen.max(initial=0), held_keys.max(initial=0))) + 1
+        seen_dev = jnp.asarray(seen.astype(np.int32))
+        _, cost_d = self._kernel_stats(seen_dev, jnp.asarray(cost_parts), num)
+        _, freq_d = self._kernel_stats(seen_dev, jnp.asarray(freq_parts), num)
+        cost = np.asarray(cost_d, dtype=np.float64)
+        freq = np.asarray(freq_d, dtype=np.float64)
+        mem = metrics.segment_sum(held_sizes, held_keys, num)
+        # universe = seen ∪ held — held membership, not mem > 0: a quiet key
+        # whose window fully evicted still occupies the store and must stay
+        # visible to the balancer (same invariant as the numpy paths)
+        live = freq > 0
+        live[held_keys] = True
+        universe = np.nonzero(live)[0].astype(np.int64)
+        return KeyStats(keys=universe, cost=cost[live], mem=mem[live],
+                        freq=freq[live])
+
+    def _finish_interval(self, iv: int, n: int, task_cost: np.ndarray,
+                         buffered_count: int,
+                         stats: Optional[KeyStats]) -> IntervalReport:
         # -- measurement + controller handoff (paper steps 1-2) -----------------
-        stats = self._collect_stats(key_cost, key_freq)
         stall = self._migrated_bytes_pending / self.migration_bandwidth
         makespan = float(task_cost.max()) if n else 0.0
         report = IntervalReport(
@@ -162,6 +369,61 @@ class KeyedStage:
             if ev.result is not None:
                 self._plan_time_pending = ev.result.plan_time_s
         return report
+
+    # -- reference per-tuple path (parity oracle; vectorized=False) ------------
+    def _process_interval_reference(self, keys: np.ndarray,
+                                    values: Optional[Sequence[Any]]
+                                    ) -> IntervalReport:
+        self._interval += 1
+        iv = self._interval
+        n = int(keys.shape[0])
+        vals = values if values is not None else [None] * n
+        if self._pending_delta is None and self._pending_delta_arr is not None:
+            self._pending_delta = set(self._pending_delta_arr.tolist())
+        task_cost = np.zeros(self.n_tasks)
+        key_cost: Dict[int, float] = defaultdict(float)
+        key_freq: Dict[int, float] = defaultdict(float)
+        buffer: List[Tuple[int, Any]] = []
+        buffered_count = 0
+
+        dests = self._dest_batch(keys) if n else np.zeros(0, np.int64)
+
+        batch_edges = np.linspace(0, n, self.micro_batches + 1).astype(int)
+        for b in range(self.micro_batches):
+            lo, hi = batch_edges[b], batch_edges[b + 1]
+            migrating = (self._pending_delta is not None
+                         and b < self.migration_batches)
+            if not migrating and buffer:
+                # Resume: replay buffered tuples with the CURRENT assignment
+                for k, v in buffer:
+                    d = int(self.controller.assignment.dest(
+                        np.asarray([k], dtype=np.int64))[0])
+                    self._run_one(d, iv, k, v, task_cost, key_cost, key_freq)
+                buffer.clear()
+                self._pending_delta = None
+                self._pending_delta_arr = None
+            for i in range(lo, hi):
+                k, v = int(keys[i]), vals[i]
+                if migrating and k in self._pending_delta:
+                    buffer.append((k, v))           # Pause: cache locally
+                    buffered_count += 1
+                    continue
+                self._run_one(int(dests[i]), iv, k, v, task_cost, key_cost,
+                              key_freq)
+        if buffer:                                   # traffic ended mid-pause
+            for k, v in buffer:
+                d = int(self.controller.assignment.dest(
+                    np.asarray([k], dtype=np.int64))[0])
+                self._run_one(d, iv, k, v, task_cost, key_cost, key_freq)
+            buffer.clear()
+        self._pending_delta = None
+        self._pending_delta_arr = None
+
+        for store in self.stores:
+            store.end_interval(iv)
+
+        stats = self._collect_stats(key_cost, key_freq)
+        return self._finish_interval(iv, n, task_cost, buffered_count, stats)
 
     def _run_one(self, d: int, interval: int, key: int, value: Any,
                  task_cost, key_cost, key_freq) -> None:
@@ -209,18 +471,19 @@ class KeyedStage:
         # reconciliation sweep: the rescale executor only covers keys present
         # in the last interval's stats; stale-state keys re-hash too.
         for s_idx, store in enumerate(self.stores):
-            keys = list(store.keys)
-            if not keys:
+            held, _ = store.sizes_arrays()
+            if not held.size:
                 continue
-            dst = self.controller.assignment.dest(np.asarray(keys, np.int64))
-            movers = [k for k, d in zip(keys, dst) if int(d) != s_idx]
-            if movers:
-                self._migrated_bytes_pending += store.migrated_bytes(movers)
-                extracted = store.extract(movers)
-                for k in movers:
-                    d = int(self.controller.assignment.dest(
-                        np.asarray([k], np.int64))[0])
-                    self.stores[d].install({k: extracted[k]})
+            dst = self.controller.assignment.dest(held)
+            moving = dst != s_idx
+            movers, mdst = held[moving], dst[moving]
+            if movers.size:
+                self._migrated_bytes_pending += store.migrated_bytes(
+                    movers.tolist())
+                extracted = store.extract_many(movers)
+                for d in np.unique(mdst):
+                    self.stores[int(d)].install_many(
+                        {int(k): extracted[int(k)] for k in movers[mdst == d]})
         self.stores = self.stores[:n_tasks]
         self.n_tasks = n_tasks
 

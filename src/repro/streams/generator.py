@@ -59,14 +59,21 @@ class WorkloadGen:
         old_loads = np.bincount(dests, weights=self.freq * self.cost_per_tuple,
                                 minlength=n_dest)
         old_loads = np.maximum(old_loads, 1e-9)
+        # incremental load maintenance: each swap moves freq mass between two
+        # instances, so the per-instance loads update in O(N_D) instead of a
+        # full O(K) bincount per candidate swap (same rng draws, same
+        # termination rule as the paper's procedure)
+        cur_loads = old_loads.copy()
         for _ in range(200_000):
             i, j = self.rng.integers(0, self.k, size=2)
-            if dests[i] == dests[j] or i == j:
+            di, dj = dests[i], dests[j]
+            if di == dj or i == j:
                 continue
+            delta = (self.freq[j] - self.freq[i]) * self.cost_per_tuple
             self.freq[i], self.freq[j] = self.freq[j], self.freq[i]
-            new_loads = np.bincount(dests, weights=self.freq * self.cost_per_tuple,
-                                    minlength=n_dest)
-            rel = np.abs(new_loads - old_loads) / old_loads
+            cur_loads[di] += delta
+            cur_loads[dj] -= delta
+            rel = np.abs(cur_loads - old_loads) / old_loads
             if float(np.max(rel)) >= self.f:
                 return
 

@@ -9,26 +9,119 @@
 
 Operators report per-tuple cost so the engine can measure c(k) instead of
 assuming cost == frequency (the paper makes the same distinction).
+
+Batched execution
+-----------------
+The vectorized engine (``KeyedStage(vectorized=True)``, the default — see
+:mod:`repro.streams.engine` and ``docs/architecture.md``) hands each task a
+whole micro-batch segment at once via :meth:`Operator.process_batch`. The
+built-in operators implement it with closed-form per-key arithmetic: a key
+hit ``m`` times in a segment updates its state once and derives the same
+emits/costs the per-tuple path would produce tuple by tuple. Custom
+operators only need ``process``; the base-class ``process_batch`` falls back
+to the per-tuple loop, so they stay correct (just not fast) under the
+vectorized engine. Set ``needs_values = False`` on operators that ignore
+tuple payloads so the engine can skip materializing per-segment value lists.
 """
 
 from __future__ import annotations
 
-from typing import Any, List, Tuple
+import dataclasses
+from typing import Any, List, Optional, Sequence, Tuple
+
+import numpy as np
 
 from .state import TaskStateStore
 
 
+@dataclasses.dataclass
+class BatchResult:
+    """What one :meth:`Operator.process_batch` call produced.
+
+    The engine folds these straight into its array accumulators (per-task
+    cost, per-key cost/freq via ``np.add.at``) — no per-tuple Python on the
+    hot path.
+
+    Attributes:
+      uniq_keys: (U,) int64 — unique keys of the segment, sorted ascending.
+      key_cost:  (U,) float64 — summed c(k) contribution per unique key.
+      key_freq:  (U,) float64 — tuple count per unique key.
+      task_cost: total cost charged to the task (== key_cost.sum()).
+      outputs:   final (key, value) emit per key — the last emit the
+                 per-tuple path would have written (downstream is last-wins).
+      emit_sum:  sum of *all* numeric emitted values the per-tuple path
+                 would have produced (not just the final ones).
+    """
+
+    uniq_keys: np.ndarray
+    key_cost: np.ndarray
+    key_freq: np.ndarray
+    task_cost: float
+    outputs: List[Tuple[int, Any]]
+    emit_sum: float
+
+
+def _group_values(inv: np.ndarray, counts: np.ndarray,
+                  values: Sequence[Any]) -> List[List[Any]]:
+    """Split ``values`` into per-unique-key lists (stream order preserved)."""
+    order = np.argsort(inv, kind="stable")
+    bounds = np.concatenate(([0], np.cumsum(counts)))
+    if isinstance(values, np.ndarray):
+        vs = values[order]
+        return [vs[bounds[u]:bounds[u + 1]].tolist()
+                for u in range(len(counts))]
+    return [[values[i] for i in order[bounds[u]:bounds[u + 1]]]
+            for u in range(len(counts))]
+
+
 class Operator:
     name = "op"
+    #: set False when ``process_batch`` never reads tuple payloads — lets the
+    #: vectorized engine skip gathering per-segment value lists entirely.
+    needs_values = True
 
     def process(self, store: TaskStateStore, interval: int, key: int,
                 value: Any) -> Tuple[List[Tuple[int, Any]], float]:
         """Returns (output tuples, cost units consumed)."""
         raise NotImplementedError
 
+    def process_batch(self, store: TaskStateStore, interval: int,
+                      keys: np.ndarray,
+                      values: Optional[Sequence[Any]]) -> BatchResult:
+        """Process one task's micro-batch segment; default per-tuple fallback.
+
+        Semantically equivalent to calling :meth:`process` for each tuple in
+        stream order. Built-in operators override this with vectorized
+        closed forms; custom operators inherit this loop and remain correct.
+        """
+        key_cost: dict = {}
+        key_freq: dict = {}
+        outputs: dict = {}
+        emit = 0.0
+        total = 0.0
+        vals = values if values is not None else [None] * len(keys)
+        for k, v in zip(keys.tolist(), vals):
+            outs, cost = self.process(store, interval, k, v)
+            total += cost
+            key_cost[k] = key_cost.get(k, 0.0) + cost
+            key_freq[k] = key_freq.get(k, 0.0) + 1.0
+            for ok, ov in outs:
+                outputs[ok] = ov
+                if isinstance(ov, (int, float)):
+                    emit += float(ov)
+        uniq = np.fromiter(sorted(key_cost), dtype=np.int64, count=len(key_cost))
+        return BatchResult(
+            uniq_keys=uniq,
+            key_cost=np.fromiter((key_cost[int(k)] for k in uniq),
+                                 dtype=np.float64, count=len(uniq)),
+            key_freq=np.fromiter((key_freq[int(k)] for k in uniq),
+                                 dtype=np.float64, count=len(uniq)),
+            task_cost=total, outputs=list(outputs.items()), emit_sum=emit)
+
 
 class WordCount(Operator):
     name = "wordcount"
+    needs_values = False
 
     def __init__(self, bytes_per_entry: float = 16.0):
         self.bytes_per_entry = bytes_per_entry
@@ -40,6 +133,29 @@ class WordCount(Operator):
         sl.payload["count"] += 1
         total = sum(s.payload["count"] for s in ks.iter_window())
         return [(key, total)], 1.0
+
+    def process_batch(self, store, interval, keys, values):
+        # m tuples on a key whose window already counts c0 emit the running
+        # totals c0+1 .. c0+m; their sum is m*c0 + m(m+1)/2 and the final
+        # (last-wins) emit is c0+m. One state update per unique key.
+        uniq, counts = np.unique(keys, return_counts=True)
+        pairs = store.update_many(interval, uniq, init=lambda: {"count": 0},
+                                  size=self.bytes_per_entry)
+        c0s = np.empty(len(uniq), dtype=np.int64)
+        for i, (m, (ks, sl)) in enumerate(zip(counts.tolist(), pairs)):
+            c0 = 0
+            for s in ks.slices.values():
+                c0 += s.payload["count"]
+            sl.payload["count"] += m
+            c0s[i] = c0
+        # emits per key are the running totals c0+1 .. c0+m: their sum and
+        # the final value are exact integer arithmetic, done array-wide
+        totals = c0s + counts
+        outputs = list(zip(uniq.tolist(), totals.tolist()))
+        emit = float(np.dot(counts, c0s) + np.dot(counts, counts + 1) / 2.0)
+        freq = counts.astype(np.float64)
+        return BatchResult(uniq, freq.copy(), freq, float(len(keys)),
+                           outputs, emit)
 
 
 class WindowedSelfJoin(Operator):
@@ -61,12 +177,36 @@ class WindowedSelfJoin(Operator):
         cost = 1.0 + self.probe_cost * matches
         return [(key, matches)], cost
 
+    def process_batch(self, store, interval, keys, values):
+        # the j-th of m tuples on a key with c0 window entries probes
+        # c0 + (j-1) matches, so total probes = m*c0 + m(m-1)/2 and the last
+        # emit is c0 + m - 1; cost = m inserts + probe_cost * total probes.
+        uniq, inv, counts = np.unique(keys, return_inverse=True,
+                                      return_counts=True)
+        grouped = _group_values(inv, counts, values)
+        pairs = store.update_many(interval, uniq, init=list, size=0.0)
+        outputs = []
+        emit = 0.0
+        key_cost = np.empty(len(uniq), dtype=np.float64)
+        for u, (k, m, (ks, cur)) in enumerate(
+                zip(uniq.tolist(), counts.tolist(), pairs)):
+            c0 = sum(len(sl.payload) for sl in ks.iter_window())
+            cur.payload.extend(grouped[u])
+            cur.size += self.bytes_per_tuple * m
+            probes = m * c0 + m * (m - 1) / 2.0
+            emit += probes
+            outputs.append((k, c0 + m - 1))
+            key_cost[u] = m * 1.0 + self.probe_cost * probes
+        return BatchResult(uniq, key_cost, counts.astype(np.float64),
+                           float(key_cost.sum()), outputs, emit)
+
 
 class PartialWordCount(Operator):
     """Split-key (PKG-style) word count: emits partial counts that must be
     merged downstream — used to model PKG's extra merge operator (Fig. 2a)."""
 
     name = "partial_wordcount"
+    needs_values = False
 
     def __init__(self, bytes_per_entry: float = 16.0):
         self.bytes_per_entry = bytes_per_entry
@@ -77,6 +217,24 @@ class PartialWordCount(Operator):
                           size=self.bytes_per_entry)
         sl.payload["count"] += 1
         return [(key, sl.payload["count"])], 1.0
+
+    def process_batch(self, store, interval, keys, values):
+        # partial counts reset per interval slice: emits c0+1 .. c0+m where
+        # c0 is the *current slice* count (not the window total).
+        uniq, counts = np.unique(keys, return_counts=True)
+        pairs = store.update_many(interval, uniq,
+                                  init=lambda: {"count": 0},
+                                  size=self.bytes_per_entry)
+        outputs = []
+        emit = 0.0
+        for k, m, (_, sl) in zip(uniq.tolist(), counts.tolist(), pairs):
+            c0 = sl.payload["count"]
+            sl.payload["count"] = c0 + m
+            outputs.append((k, c0 + m))
+            emit += m * c0 + m * (m + 1) / 2.0
+        freq = counts.astype(np.float64)
+        return BatchResult(uniq, freq.copy(), freq, float(len(keys)),
+                           outputs, emit)
 
 
 class MergeCounts(Operator):
@@ -93,3 +251,19 @@ class MergeCounts(Operator):
                           size=self.bytes_per_entry)
         sl.payload["count"] = max(sl.payload["count"], int(value))
         return [], 0.5
+
+    def process_batch(self, store, interval, keys, values):
+        # running max over partial counts: order-insensitive, so the batch
+        # form is a single max per unique key.
+        uniq, inv, counts = np.unique(keys, return_inverse=True,
+                                      return_counts=True)
+        grouped = _group_values(inv, counts, values)
+        pairs = store.update_many(interval, uniq,
+                                  init=lambda: {"count": 0},
+                                  size=self.bytes_per_entry)
+        for u, (_, sl) in enumerate(pairs):
+            sl.payload["count"] = max(sl.payload["count"],
+                                      max(int(v) for v in grouped[u]))
+        freq = counts.astype(np.float64)
+        return BatchResult(uniq, 0.5 * freq, freq, 0.5 * float(len(keys)),
+                           [], 0.0)

@@ -4,13 +4,32 @@ Each key holds one state object per time interval; the store evicts state
 older than ``window`` intervals after the interval closes (the paper's model:
 "the task instance erases the state from T_{i-w} after finishing T_i").
 ``S(k, w)`` — the migration-cost weight — is the summed size over the window.
+
+Batched API
+-----------
+The vectorized engine (see :mod:`repro.streams.engine`) never touches state
+one key at a time on the hot path.  Instead it uses the array-at-a-time
+methods added here:
+
+* :meth:`TaskStateStore.update_many` — fetch-or-create the current interval's
+  :class:`WindowSlice` for a whole batch of unique keys in one call (one dict
+  probe per *unique* key instead of one per tuple);
+* :meth:`TaskStateStore.extract_many` / :meth:`TaskStateStore.install_many` —
+  migration primitives over key arrays (paper protocol steps 5-6);
+* :meth:`TaskStateStore.sizes_arrays` — ``(keys, S(k,w))`` as numpy arrays
+  for vectorized stats collection (paper step 1).
+
+The scalar methods (:meth:`state`, :meth:`extract`, :meth:`install`) remain
+for the reference per-tuple path and for custom operators.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from collections import OrderedDict, defaultdict
+from collections import OrderedDict
 from typing import Any, Callable, Dict, Iterator, List, Tuple
+
+import numpy as np
 
 
 @dataclasses.dataclass
@@ -37,9 +56,10 @@ class KeyState:
 
     def evict_before(self, interval: int) -> None:
         cutoff = interval - self.window + 1
-        stale = [i for i in self.slices if i < cutoff]
-        for i in stale:
-            del self.slices[i]
+        slices = self.slices
+        # slices are appended in interval order, so stale ones are a prefix
+        while slices and next(iter(slices)) < cutoff:
+            slices.popitem(last=False)
 
     def total_size(self) -> float:
         return float(sum(sl.size for sl in self.slices.values()))
@@ -66,8 +86,74 @@ class TaskStateStore:
         for ks in self.keys.values():
             ks.evict_before(interval)
 
+    def end_interval_collect(self, interval: int
+                             ) -> Tuple[np.ndarray, np.ndarray]:
+        """Evict expired slices AND return ``(keys, S(k,w))`` in one pass.
+
+        Fuses :meth:`end_interval` with :meth:`sizes_arrays` so the
+        vectorized engine touches each key once per interval boundary instead
+        of twice; produces exactly the values the two separate calls would.
+        """
+        n = len(self.keys)
+        keys_arr = np.fromiter(self.keys.keys(), dtype=np.int64, count=n)
+        sizes = np.empty(n, dtype=np.float64)
+        for i, ks in enumerate(self.keys.values()):
+            slices = ks.slices
+            if not slices:
+                sizes[i] = 0.0
+                continue
+            ks.evict_before(interval)
+            total = 0.0
+            for sl in slices.values():
+                total += sl.size
+            sizes[i] = total
+        return keys_arr, sizes
+
     def sizes(self) -> Dict[int, float]:
         return {k: ks.total_size() for k, ks in self.keys.items()}
+
+    def sizes_arrays(self) -> Tuple[np.ndarray, np.ndarray]:
+        """All held keys and their windowed sizes ``S(k, w)`` as arrays.
+
+        Feeds the vectorized stats collection (paper Fig. 5 step 1) without
+        building an intermediate dict per interval.
+        """
+        n = len(self.keys)
+        ks = np.fromiter(self.keys.keys(), dtype=np.int64, count=n)
+        sz = np.fromiter(
+            (sum(sl.size for sl in s.slices.values())
+             for s in self.keys.values()),
+            dtype=np.float64, count=n)
+        return ks, sz
+
+    # -- batched hot-path access ----------------------------------------------
+    def update_many(self, interval: int, uniq_keys: np.ndarray,
+                    init: Callable[[], Any],
+                    size: float = 0.0) -> List[Tuple[KeyState, WindowSlice]]:
+        """Fetch-or-create the interval slice for a batch of *unique* keys.
+
+        Returns ``(KeyState, WindowSlice)`` pairs aligned with ``uniq_keys``
+        (operators need the full :class:`KeyState` to scan the window, e.g.
+        for the word-count total or the self-join probe count). This is the
+        batched form of ``store.state(k).slice_for(interval, ...)`` used by
+        :meth:`repro.streams.operators.Operator.process_batch`: the engine
+        groups a micro-batch by key first, so each unique key pays one dict
+        probe no matter how many tuples hit it.
+        """
+        out: List[Tuple[KeyState, WindowSlice]] = []
+        keys = self.keys
+        window = self.window
+        for k in uniq_keys.tolist():
+            ks = keys.get(k)
+            if ks is None:
+                ks = KeyState(window)
+                keys[k] = ks
+            sl = ks.slices.get(interval)      # slice_for, inlined (hot path)
+            if sl is None:
+                sl = WindowSlice(interval, init(), size)
+                ks.slices[interval] = sl
+            out.append((ks, sl))
+        return out
 
     # -- migration primitives (paper steps 5-6) --------------------------------
     def extract(self, keys: List[int]) -> Dict[int, KeyState]:
@@ -77,11 +163,23 @@ class TaskStateStore:
                 out[k] = self.keys.pop(k)
         return out
 
+    def extract_many(self, keys: np.ndarray) -> Dict[int, KeyState]:
+        """Array-at-a-time :meth:`extract` (migration step 5).
+
+        Accepts any integer array; keys not present on this task are ignored,
+        matching the scalar method's semantics.
+        """
+        return self.extract([int(k) for k in np.asarray(keys).ravel()])
+
     def install(self, states: Dict[int, KeyState]) -> None:
         for k, ks in states.items():
             if k in self.keys:
                 raise RuntimeError(f"key {k} already present on target task")
             self.keys[k] = ks
+
+    def install_many(self, states: Dict[int, KeyState]) -> None:
+        """Alias of :meth:`install` under the batched-API naming (step 6)."""
+        self.install(states)
 
     def migrated_bytes(self, keys: List[int]) -> float:
         return float(sum(self.keys[k].total_size() for k in keys

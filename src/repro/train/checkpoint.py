@@ -23,7 +23,19 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+
+try:                       # optional extra: install via `pip install .[test]`
+    import zstandard
+except ImportError:        # pragma: no cover - exercised in bare envs
+    zstandard = None
+
+
+def _require_zstandard():
+    if zstandard is None:
+        raise ImportError(
+            "checkpointing requires the optional 'zstandard' package; "
+            "install it with `pip install zstandard` (or the [test] extra)")
+    return zstandard
 
 
 def _tree_paths(tree) -> list:
@@ -85,7 +97,8 @@ class CheckpointManager:
         tmp = Path(tempfile.mkdtemp(dir=self.dir, prefix=".tmp_"))
         try:
             blob = _pack_tree(state)
-            comp = zstandard.ZstdCompressor(level=self.compression_level)
+            comp = _require_zstandard().ZstdCompressor(
+                level=self.compression_level)
             (tmp / "state.msgpack.zst").write_bytes(comp.compress(blob))
             manifest = {
                 "step": step,
@@ -133,7 +146,7 @@ class CheckpointManager:
         if manifest["structure"] != _structure_hash(like):
             raise ValueError("checkpoint structure mismatch: "
                              f"{manifest['structure']} vs current tree")
-        comp = zstandard.ZstdDecompressor()
+        comp = _require_zstandard().ZstdDecompressor()
         blob = comp.decompress((target / "state.msgpack.zst").read_bytes())
         state = _unpack_tree(blob, like)
         return step, state, manifest

@@ -30,12 +30,25 @@ def make_batch(cfg, rng):
     return batch
 
 
-@pytest.fixture(scope="module")
+@pytest.fixture()
 def rng():
+    # function-scoped: batches must not depend on which tests ran before
+    # (a module-scoped stream made results order-dependent, so tests could
+    # pass in isolation and fail in the full suite)
     return np.random.default_rng(0)
 
 
-@pytest.mark.parametrize("arch", ARCHS)
+# The big configs dominate suite wall time (minutes each on CPU); tier-1
+# deselects them via the `slow` marker (see pyproject.toml).
+_HEAVY = {"jamba_1_5_large_398b", "gemma3_12b", "whisper_large_v3"}
+
+
+def _arch_params(archs):
+    return [pytest.param(a, marks=pytest.mark.slow) if a in _HEAVY else a
+            for a in archs]
+
+
+@pytest.mark.parametrize("arch", _arch_params(ARCHS))
 def test_forward_and_loss(arch, rng):
     cfg = smoke_config(arch)
     cfg.validate()
@@ -51,7 +64,7 @@ def test_forward_and_loss(arch, rng):
     assert float(loss) < np.log(cfg.vocab) * 3
 
 
-@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("arch", _arch_params(ARCHS))
 def test_train_gradient_finite(arch, rng):
     cfg = smoke_config(arch)
     params = schema.init(model_schema(cfg), jax.random.PRNGKey(1))
@@ -66,8 +79,9 @@ def test_train_gradient_finite(arch, rng):
     assert sum(1 for n_ in norms if n_ > 0) > len(norms) * 0.5
 
 
-@pytest.mark.parametrize("arch", ["gemma3_12b", "qwen2_7b", "xlstm_125m",
-                                  "jamba_1_5_large_398b", "whisper_large_v3"])
+@pytest.mark.parametrize("arch", _arch_params(
+    ["gemma3_12b", "qwen2_7b", "xlstm_125m", "jamba_1_5_large_398b",
+     "whisper_large_v3"]))
 def test_prefill_then_decode_matches_full_forward(arch, rng):
     """Teacher-forced decode through the cache must reproduce the full-seq
     forward logits (the serve path's correctness invariant)."""

@@ -2,6 +2,7 @@
 
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")   # optional [test] extra
 from hypothesis import given, settings, strategies as st
 
 from repro.core.balancer import (Assignment, BalanceConfig, KeyStats, ModHash,

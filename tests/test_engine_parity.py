@@ -1,0 +1,158 @@
+"""Vectorized engine == per-tuple reference engine, field for field.
+
+The vectorized fast path (``KeyedStage(vectorized=True)``, the default) must
+be a pure optimization: on the same fixed-seed skewed stream it has to emit
+the same outputs, migrate the same bytes, and report the same
+:class:`IntervalReport` numbers as the per-tuple reference loop
+(``vectorized=False``) — including through live rebalances, pause/replay
+windows, and elastic rescales.
+
+WordCount costs are integers, so every float in the pipeline is exact and
+the comparison is strict equality. For the self-join we pin ``probe_cost``
+to a power of two so per-tuple costs are dyadic rationals and summation
+order cannot produce ulp drift (with the default 0.01 the two paths differ
+by ~1e-15, which the balancer's greedy tie-breaks can then amplify into a
+different-but-equally-balanced plan).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (Assignment, BalanceConfig, ModHash,
+                        RebalanceController)
+from repro.streams import (KeyedStage, MergeCounts, Operator,
+                           PartialWordCount, WindowedSelfJoin, WordCount,
+                           WorkloadGen)
+
+REPORT_FIELDS = ("interval", "tuples", "makespan", "migration_stall",
+                 "throughput", "skewness", "theta", "migrated_bytes",
+                 "table_size", "buffered")
+
+
+def make_stage(operator, vectorized, n_tasks=6, theta_max=0.05,
+               table_max=400, window=3, algorithm="mixed", seed=0):
+    controller = RebalanceController(
+        Assignment(ModHash(n_tasks, seed=seed)),
+        BalanceConfig(theta_max=theta_max, table_max=table_max, window=window),
+        algorithm=algorithm)
+    return KeyedStage(operator, controller, window=window,
+                      vectorized=vectorized)
+
+
+def drive_pair(op_factory, intervals=6, tuples=4000, k=800, z=1.1, f=0.8,
+               gen_seed=2, **stage_kw):
+    gens = [WorkloadGen(k=k, z=z, f=f, seed=gen_seed, window=3)
+            for _ in range(2)]
+    stages = [make_stage(op_factory(), vec, **stage_kw)
+              for vec in (True, False)]
+    for i in range(intervals):
+        keys = None
+        for gen, stage in zip(gens, stages):
+            if i:
+                gen.interval(stage.controller.assignment)
+            drawn = gen.draw_tuples(tuples).astype(np.int64)
+            if keys is None:
+                keys = drawn
+            else:
+                # both paths must see the same stream: if they diverge the
+                # engines are already non-equivalent (plans differ)
+                assert np.array_equal(drawn, keys), "streams diverged"
+            stage.process_interval_arrays(drawn, np.full(tuples, i))
+    return stages
+
+
+def assert_reports_identical(vec_stage, ref_stage):
+    assert len(vec_stage.reports) == len(ref_stage.reports)
+    for rv, rr in zip(vec_stage.reports, ref_stage.reports):
+        for field in REPORT_FIELDS:
+            assert getattr(rv, field) == getattr(rr, field), field
+        assert np.array_equal(rv.task_loads, rr.task_loads)
+
+
+@pytest.mark.parametrize("op_factory", [
+    WordCount, PartialWordCount,
+    lambda: WindowedSelfJoin(probe_cost=1.0 / 64),
+], ids=["wordcount", "partial_wordcount", "selfjoin_dyadic"])
+def test_reports_identical_through_rebalances(op_factory):
+    vec, ref = drive_pair(op_factory)
+    assert_reports_identical(vec, ref)
+    # rebalances actually happened, so the pause/replay path was exercised
+    assert any(r.migrated_bytes > 0 for r in vec.reports)
+    assert any(r.buffered > 0 for r in vec.reports)
+
+
+@pytest.mark.parametrize("algorithm", ["mixed", "mintable", "readj"])
+def test_reports_identical_per_algorithm(algorithm):
+    vec, ref = drive_pair(WordCount, intervals=4, algorithm=algorithm)
+    assert_reports_identical(vec, ref)
+
+
+def test_outputs_emits_and_state_identical():
+    vec, ref = drive_pair(WordCount)
+    assert vec.outputs == ref.outputs
+    assert vec.emitted_sum == ref.emitted_sum
+    assert len(vec.stores) == len(ref.stores)
+    for sv, sr in zip(vec.stores, ref.stores):
+        assert sorted(sv.keys) == sorted(sr.keys)
+        for k, ks in sv.keys.items():
+            other = sr.keys[k]
+            assert list(ks.slices) == list(other.slices)
+            for iv, sl in ks.slices.items():
+                assert sl.payload == other.slices[iv].payload
+                assert sl.size == other.slices[iv].size
+
+
+def test_merge_counts_parity():
+    rng = np.random.default_rng(0)
+    stages = [make_stage(MergeCounts(), vec, window=2) for vec in (True, False)]
+    for i in range(3):
+        keys = rng.integers(0, 200, size=1500).astype(np.int64)
+        vals = rng.integers(1, 50, size=1500)
+        for stage in stages:
+            stage.process_interval_arrays(keys, vals)
+    assert_reports_identical(*stages)
+    for sv, sr in zip(stages[0].stores, stages[1].stores):
+        assert {k: [s.payload for s in ks.slices.values()]
+                for k, ks in sv.keys.items()} == \
+               {k: [s.payload for s in ks.slices.values()]
+                for k, ks in sr.keys.items()}
+
+
+def test_custom_operator_uses_fallback_batch_path():
+    """Operators that only implement process() stay correct when vectorized:
+    they inherit the base-class per-tuple process_batch fallback."""
+
+    class CustomCount(Operator):
+        name = "custom"
+
+        def __init__(self):
+            self._inner = WordCount()
+
+        def process(self, store, interval, key, value):
+            return self._inner.process(store, interval, key, value)
+
+    vec, ref = drive_pair(CustomCount, intervals=3)
+    assert_reports_identical(vec, ref)
+
+
+def test_scale_out_parity():
+    vec, ref = drive_pair(WordCount, intervals=3)
+    vec.scale_to(9)
+    ref.scale_to(9)
+    assert vec.total_state_keys() == ref.total_state_keys()
+    for sv, sr in zip(vec.stores, ref.stores):
+        assert sorted(sv.keys) == sorted(sr.keys)
+    assert vec._migrated_bytes_pending == ref._migrated_bytes_pending
+
+
+def test_list_api_matches_array_api():
+    gen = WorkloadGen(k=300, z=1.0, f=0.5, seed=4, window=2)
+    a = make_stage(WordCount(), True, window=2)
+    b = make_stage(WordCount(), True, window=2)
+    for i in range(3):
+        if i:
+            gen.interval(a.controller.assignment)
+        keys = gen.draw_tuples(1000).astype(np.int64)
+        a.process_interval_arrays(keys, None)
+        b.process_interval([(int(k), i) for k in keys])
+    assert_reports_identical(a, b)

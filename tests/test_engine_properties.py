@@ -2,6 +2,8 @@
 under arbitrary skew/fluctuation/algorithm sequences."""
 
 import numpy as np
+import pytest
+pytest.importorskip("hypothesis")   # optional [test] extra
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (Assignment, BalanceConfig, ModHash,

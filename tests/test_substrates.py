@@ -1,6 +1,8 @@
 """Integration tests: SkewShield MoE placement, keyed data pipeline, serving
 engine, checkpointing, and the trainer loop (smoke scale, CPU)."""
 
+import importlib.util
+
 import numpy as np
 import jax
 import jax.numpy as jnp
@@ -141,6 +143,12 @@ def test_serve_engine_evicts_idle_sessions():
 
 
 # ------------------------------------------------------------- checkpoint --
+needs_zstandard = pytest.mark.skipif(
+    importlib.util.find_spec("zstandard") is None,
+    reason="optional dep zstandard not installed")
+
+
+@needs_zstandard
 def test_checkpoint_roundtrip_and_latest(tmp_path):
     mgr = CheckpointManager(str(tmp_path), keep=2)
     state = {"w": jnp.arange(8, dtype=jnp.bfloat16),
@@ -154,6 +162,7 @@ def test_checkpoint_roundtrip_and_latest(tmp_path):
                                   np.asarray(state2["w"], np.float32))
 
 
+@needs_zstandard
 def test_checkpoint_gc_and_structure_check(tmp_path):
     mgr = CheckpointManager(str(tmp_path), keep=1)
     state = {"a": jnp.zeros(4)}
@@ -175,6 +184,7 @@ def _toy_data(cfg, batch=2, seq=16):
     return data_fn
 
 
+@needs_zstandard
 def test_trainer_loss_decreases_and_resumes(tmp_path):
     cfg = smoke_config("granite_8b")
     tcfg = TrainerConfig(total_steps=8, checkpoint_every=4, log_every=100,
