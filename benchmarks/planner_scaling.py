@@ -1,0 +1,210 @@
+"""Planner scaling: plan time vs key-domain size K for the algorithm family.
+
+Sweeps the array-native planner (mixed / mintable / minmig / compact /
+readj / mixed+head-split) over K = 1e4..1e6 on two workload profiles and
+A/Bs `mixed` against the scalar pre-PR planner preserved in
+`repro.core.balancer.reference`:
+
+* ``paper``  — Table II defaults (z=0.9, theta_max=0.08, warm table,
+  f=0.5): the common near-balanced interval, little churn.
+* ``tight``  — absolute balance (theta_max=0, the paper's Fig. 4 setting)
+  under full fluctuation: every instance sheds to the exact mean and the
+  table budget forces Mixed's n-escalation, i.e. the plan actually works.
+
+Every A/B point also asserts plan parity (`RebalanceResult.same_plan`), so
+the reported speedup is for bit-identical output. The headline acceptance
+number is ``speedups["tight"]["100000"]`` (>= 10x required).
+
+Run directly for JSON output:
+
+    PYTHONPATH=src:. python benchmarks/planner_scaling.py [--full|--smoke] [--out f]
+
+or via the harness: ``python benchmarks/run.py --only planner_scaling``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.balancer import (Assignment, BalanceConfig, ModHash,
+                                 compact_mixed, mintable, minmig, mixed,
+                                 readj, reference_mixed)
+from repro.streams.generator import WorkloadGen
+
+PROFILES = {
+    "paper": dict(z=0.9, f=0.5, theta_max=0.08, table_max=3_000),
+    "tight": dict(z=0.9, f=1.0, theta_max=0.0, table_max=3_000),
+}
+
+# per-algorithm K ceilings (None = no cap); anything skipped is logged so the
+# JSON never silently narrows coverage
+REFERENCE_K_CAP = 100_000     # scalar planner: ~18 s at 1e5 on 'tight'
+READJ_K_CAP = 10_000          # pairwise search is O(H^2) per round
+
+
+def _head_mixed(stats, assignment, config):
+    return mixed(stats, assignment,
+                 dataclasses.replace(config, head_fraction=0.01))
+
+
+def _compact(stats, assignment, config):
+    return compact_mixed(stats, assignment, config, r=3)
+
+
+def _readj(stats, assignment, config):
+    return readj(stats, assignment, config, sigma=0.01)
+
+
+ALGOS = {
+    "mixed": mixed,
+    "mintable": mintable,
+    "minmig": minmig,
+    "compact_mixed_r3": _compact,
+    "mixed_head_1pct": _head_mixed,
+    "readj": _readj,
+}
+
+
+def _instance(profile: str, k: int, seed: int = 0):
+    """Warmed instance: one mixed solve builds the table, one fluctuation
+    step produces the interval the planners are timed on."""
+    p = PROFILES[profile]
+    gen = WorkloadGen(k=k, z=p["z"], f=p["f"], seed=seed, window=2)
+    assignment = Assignment(ModHash(15, seed=seed))
+    cfg = BalanceConfig(theta_max=p["theta_max"], table_max=p["table_max"],
+                        window=2)
+    stats = gen.interval(assignment, fluctuate=False)
+    assignment = mixed(stats, assignment, cfg).assignment
+    return gen.interval(assignment), assignment, cfg
+
+
+def _time_algo(fn, stats, assignment, cfg, repeats: int):
+    best = None
+    for _ in range(repeats):
+        res = fn(stats, assignment, cfg)
+        if best is None or res.plan_time_s < best.plan_time_s:
+            best = res
+    return best
+
+
+def run(ks: Optional[List[int]] = None, full: bool = False,
+        smoke: bool = False) -> dict:
+    if ks is None:
+        if smoke:
+            ks = [5_000]
+        elif full:
+            ks = [10_000, 30_000, 100_000, 300_000, 1_000_000]
+        else:
+            ks = [10_000, 30_000, 100_000]
+    series: List[dict] = []
+    skipped: List[dict] = []
+    speedups: Dict[str, Dict[str, float]] = {}
+    parity: List[dict] = []
+    for profile in PROFILES:
+        speedups[profile] = {}
+        for k in ks:
+            stats, assignment, cfg = _instance(profile, k)
+            repeats = 2 if k <= 30_000 else 1
+            mixed_time = None
+            for name, fn in ALGOS.items():
+                if name == "readj" and k > READJ_K_CAP:
+                    skipped.append({"algo": name, "profile": profile, "k": k,
+                                    "reason": f"O(H^2) search; capped at "
+                                              f"K={READJ_K_CAP}"})
+                    continue
+                res = _time_algo(fn, stats, assignment, cfg, repeats)
+                series.append({
+                    "profile": profile, "algo": name, "k": k,
+                    "plan_time_s": res.plan_time_s,
+                    "theta": res.theta,
+                    "feasible_balance": res.feasible_balance,
+                    "table_size": res.table_size,
+                    "moved_keys": int(len(res.moved_keys)),
+                    "trials": res.meta.get("trials", 1.0),
+                })
+                if name == "mixed":
+                    mixed_time = res
+            if k > REFERENCE_K_CAP:
+                skipped.append({"algo": "reference_mixed", "profile": profile,
+                                "k": k,
+                                "reason": f"scalar planner; capped at "
+                                          f"K={REFERENCE_K_CAP}"})
+                continue
+            # same best-of-N as the array planner, so the A/B is symmetric
+            ref = _time_algo(reference_mixed, stats, assignment, cfg, repeats)
+            series.append({
+                "profile": profile, "algo": "reference_mixed", "k": k,
+                "plan_time_s": ref.plan_time_s, "theta": ref.theta,
+                "feasible_balance": ref.feasible_balance,
+                "table_size": ref.table_size,
+                "moved_keys": int(len(ref.moved_keys)),
+                "trials": ref.meta.get("trials", 1.0),
+            })
+            ok = mixed_time.same_plan(ref)
+            parity.append({"profile": profile, "k": k, "ok": ok})
+            speedups[profile][str(k)] = (ref.plan_time_s /
+                                         mixed_time.plan_time_s)
+    return {
+        "ks": ks,
+        "profiles": PROFILES,
+        "series": series,
+        "speedups_mixed_vs_reference": speedups,
+        "parity": parity,
+        "parity_all_ok": all(p["ok"] for p in parity),
+        "skipped": skipped,
+    }
+
+
+def rows(quick: bool = True):
+    """run.py harness adapter (kept small: K <= 3e4 so the sweep stays fast)."""
+    r = run(ks=[10_000, 30_000] if quick else [10_000, 30_000, 100_000])
+    out = []
+    for s in r["series"]:
+        if s["algo"] in ("mixed", "reference_mixed", "compact_mixed_r3"):
+            out.append((f"planner_scaling/{s['profile']}/{s['algo']}/k{s['k']}",
+                        s["plan_time_s"] * 1e6,
+                        f"theta={s['theta']:.4f};table={s['table_size']}"))
+    for profile, sp in r["speedups_mixed_vs_reference"].items():
+        for k, x in sp.items():
+            out.append((f"planner_scaling/{profile}/speedup/k{k}", 0.0,
+                        f"{x:.1f}x;parity={r['parity_all_ok']}"))
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true",
+                    help="extend the sweep to K=3e5 and 1e6")
+    ap.add_argument("--smoke", action="store_true",
+                    help="single small K (CI): exercises every algorithm, "
+                         "the reference A/B and the parity check in seconds")
+    ap.add_argument("--out", default=None,
+                    help="write JSON here instead of stdout")
+    args = ap.parse_args()
+    t0 = time.time()
+    result = run(full=args.full, smoke=args.smoke)
+    result["wall_s"] = time.time() - t0
+    if not result["parity_all_ok"]:
+        print("PARITY FAILURE: array planner diverged from reference",
+              file=sys.stderr)
+        sys.exit(1)
+    blob = json.dumps(result, indent=2)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(blob + "\n")
+        tight = result["speedups_mixed_vs_reference"].get("tight", {})
+        print(f"wrote {args.out}: tight-profile speedups {tight}",
+              file=sys.stderr)
+    else:
+        print(blob)
+
+
+if __name__ == "__main__":
+    main()

@@ -14,7 +14,7 @@ MODULES = [
     "fig11_discretization", "fig12_fluctuation", "fig13_throughput",
     "fig14_realdata", "fig15_scaleout", "fig16_tpch", "fig17_table_size",
     "fig18_table_growth", "fig19_window", "fig20_beta",
-    "moe_skewshield", "kernels_bench", "engine_fastpath",
+    "moe_skewshield", "kernels_bench", "engine_fastpath", "planner_scaling",
 ]
 
 

@@ -9,6 +9,7 @@ from .types import (Assignment, BalanceConfig, KeyStats, RebalanceResult,
                     HashRouter)
 from .hashing import ConsistentHash, ModHash, splitmix64
 from . import metrics
+from .llfd import PlannerContext, Workspace
 from .simple import simple
 from .mintable import mintable
 from .minmig import minmig
@@ -17,6 +18,8 @@ from .readj import readj, readj_best_sigma
 from .pkg import pkg_route, pkg_route_stats, PKGResult
 from .compact import compact_mixed, build_groups
 from .discretize import discretize, hlhe_representatives, total_deviation
+from .reference import (REFERENCE_ALGORITHMS, reference_mintable,
+                        reference_minmig, reference_mixed, reference_mixed_bf)
 
 ALGORITHMS = {
     "simple": simple,
@@ -26,13 +29,20 @@ ALGORITHMS = {
     "mixed_bf": mixed_bf,
     "readj": readj,
     "compact_mixed": compact_mixed,
+    # scalar pre-PR planner, kept as the parity oracle / A-B baseline
+    "mixed_reference": reference_mixed,
+    "mintable_reference": reference_mintable,
+    "minmig_reference": reference_minmig,
 }
 
 __all__ = [
     "Assignment", "BalanceConfig", "KeyStats", "RebalanceResult", "HashRouter",
     "ConsistentHash", "ModHash", "splitmix64", "metrics",
+    "PlannerContext", "Workspace",
     "simple", "mintable", "minmig", "mixed", "mixed_bf",
     "readj", "readj_best_sigma", "pkg_route", "pkg_route_stats", "PKGResult",
     "compact_mixed", "build_groups", "discretize", "hlhe_representatives",
-    "total_deviation", "ALGORITHMS",
+    "total_deviation", "ALGORITHMS", "REFERENCE_ALGORITHMS",
+    "reference_mintable", "reference_minmig", "reference_mixed",
+    "reference_mixed_bf",
 ]

@@ -42,6 +42,16 @@ def theta(loads_arr: np.ndarray) -> float:
     return max(0.0, float(np.max(loads_arr - mean) / mean))
 
 
+def theta_for(stats: KeyStats, assignment: Assignment) -> float:
+    """theta of the current assignment in one call (trigger-path shorthand).
+
+    The controller's step-2 decision and several benchmarks all spell
+    ``theta(loads(stats, assignment))``; this keeps the pair fused so the
+    destination lookup happens exactly once.
+    """
+    return theta(loads(stats, assignment))
+
+
 def theta_two_sided(loads_arr: np.ndarray) -> float:
     """max_d |L(d) - mean| / mean (paper Sec. II-A's display form)."""
     mean = float(np.mean(loads_arr))

@@ -7,6 +7,13 @@ the bump monotone (n += overuse, capped at N_A) so the loop provably
 terminates; at n = N_A the trial equals MinTable, matching the paper's
 observation that Mixed degenerates to MinTable when even the minimal table
 needed for balance exceeds A_max.
+
+Incremental trial reuse: one :class:`PlannerContext` (hash/current dests, psi
+ranks, eta order, table membership) is built per call, and a ``base``
+workspace tracks the cumulative Phase-I state — since the cleaned set for
+trial n is a *prefix* of the eta order, escalating n only moves back the
+newly added keys on the checkpoint, and each trial starts from an O(K)
+array-copy clone instead of a full per-key rebuild.
 """
 
 from __future__ import annotations
@@ -15,14 +22,10 @@ import time
 
 import numpy as np
 
-from .phased import finish, run_phases, table_key_indices
+from . import metrics
+from .llfd import PlannerContext, Workspace, llfd
+from .phased import finish, table_key_indices
 from .types import Assignment, BalanceConfig, KeyStats, RebalanceResult
-
-
-def _trial(stats: KeyStats, assignment: Assignment, config: BalanceConfig,
-           table_idx_by_eta: np.ndarray, n: int, psi: np.ndarray):
-    clean = table_idx_by_eta[:n] if n > 0 else None
-    return run_phases(stats, assignment, config, psi=psi, clean_idxs=clean)
 
 
 def _eta_order(stats: KeyStats, assignment: Assignment) -> np.ndarray:
@@ -31,20 +34,32 @@ def _eta_order(stats: KeyStats, assignment: Assignment) -> np.ndarray:
     return idx[np.argsort(stats.mem[idx], kind="stable")]
 
 
+def _run_trial(base: Workspace) -> Workspace:
+    ws = base.clone()
+    ws.prepare()
+    llfd(ws)
+    return ws
+
+
 def mixed(stats: KeyStats, assignment: Assignment,
           config: BalanceConfig) -> RebalanceResult:
     t0 = time.perf_counter()
     psi = stats.gamma(config.beta)
+    ctx = PlannerContext(stats, assignment, config, psi=psi)
     by_eta = _eta_order(stats, assignment)
     n_a = len(by_eta)
+    base = Workspace(ctx=ctx)        # checkpoint: Phase-I state, grown in place
+    cleaned = 0
     n = 0
     trials = 0
     while True:
-        ws = _trial(stats, assignment, config, by_eta, n, psi)
+        if n > cleaned:              # Phase I delta: newly cleaned eta prefix
+            base.move_back_many(by_eta[cleaned:n])
+            cleaned = n
+        ws = _run_trial(base)
         trials += 1
-        overuse = len(ws.result_table()) - config.table_max
-        from . import metrics as _m
-        balance_ok = _m.theta(ws.loads) <= config.theta_max + 1e-9
+        overuse = ws.working_table_size() - config.table_max
+        balance_ok = metrics.theta(ws.loads) <= config.theta_max + 1e-9
         if (overuse <= 0 and balance_ok) or n >= n_a:
             break
         if overuse > 0:
@@ -62,11 +77,17 @@ def mixed_bf(stats: KeyStats, assignment: Assignment,
     """Brute force over n = 0..N_A; best feasible solution by migration cost."""
     t0 = time.perf_counter()
     psi = stats.gamma(config.beta)
+    ctx = PlannerContext(stats, assignment, config, psi=psi)
     by_eta = _eta_order(stats, assignment)
+    base = Workspace(ctx=ctx)
+    cleaned = 0
     best_ws, best_key, best_n = None, None, 0
     for n in range(len(by_eta) + 1):
-        ws = _trial(stats, assignment, config, by_eta, n, psi)
-        table_ok = len(ws.result_table()) <= config.table_max
+        if n > cleaned:
+            base.move_back_many(by_eta[cleaned:n])
+            cleaned = n
+        ws = _run_trial(base)
+        table_ok = ws.working_table_size() <= config.table_max
         mig = float(np.sum(ws.mem[ws.moved_mask()]))
         key = (not table_ok, mig)                    # feasible first, then min M
         if best_key is None or key < best_key:

@@ -2,6 +2,9 @@
 
 Each algorithm is a different Phase-I cleaning policy + psi criterion feeding
 the same LLFD Phase III; this module owns the plumbing and result assembly.
+Algorithms that run several trials (Mixed's n-escalation) build one
+:class:`PlannerContext` and clone checkpoints instead of calling
+:func:`run_phases` repeatedly — see ``mixed.py``.
 """
 
 from __future__ import annotations
@@ -12,34 +15,45 @@ from typing import Optional
 import numpy as np
 
 from . import metrics
-from .llfd import Workspace, llfd
+from .llfd import PlannerContext, Workspace, llfd
 from .types import Assignment, BalanceConfig, KeyStats, RebalanceResult
 
 
 def run_phases(stats: KeyStats, assignment: Assignment, config: BalanceConfig,
                *, psi: Optional[np.ndarray] = None,
-               clean_idxs: Optional[np.ndarray] = None) -> Workspace:
+               clean_idxs: Optional[np.ndarray] = None,
+               ctx: Optional[PlannerContext] = None) -> Workspace:
     """Phase I (move back ``clean_idxs``) -> Phase II -> Phase III (LLFD)."""
-    ws = Workspace(stats, assignment, config, psi=psi)
+    if ctx is None:
+        ctx = PlannerContext(stats, assignment, config, psi=psi)
+    ws = Workspace(ctx=ctx)
     if clean_idxs is not None:
-        for idx in np.asarray(clean_idxs, dtype=np.int64):
-            ws.move_back(int(idx))
+        ws.move_back_many(np.asarray(clean_idxs, dtype=np.int64))
     ws.prepare()
     llfd(ws)
     return ws
 
 
-def finish(ws: Workspace, assignment: Assignment, config: BalanceConfig,
+def finish(ws, assignment: Assignment, config: BalanceConfig,
            t0: float, **meta: float) -> RebalanceResult:
+    """Assemble a :class:`RebalanceResult` from a drained workspace.
+
+    Loads are recomputed canonically (one segment-sum over the final
+    assignment) rather than read from the workspace's incrementally
+    maintained estimate, so the array-native planner and the scalar oracle
+    report bit-identical loads/theta regardless of their internal float
+    accumulation order. Works for both Workspace implementations.
+    """
     table = ws.result_table()
     new = Assignment(assignment.hash_router, table)
     moved = ws.moved_mask()
-    th = metrics.theta(ws.loads)
+    loads = metrics.loads_for(ws.stats, ws.assign, ws.n_dest)
+    th = metrics.theta(loads)
     return RebalanceResult(
         assignment=new,
         moved_keys=ws.stats.keys[moved],
         migration_cost=float(np.sum(ws.mem[moved])),
-        loads=ws.loads.copy(),
+        loads=loads,
         table_size=len(table),
         theta=th,
         feasible_balance=th <= config.theta_max + 1e-9,
@@ -50,9 +64,16 @@ def finish(ws: Workspace, assignment: Assignment, config: BalanceConfig,
 
 
 def table_key_indices(stats: KeyStats, assignment: Assignment) -> np.ndarray:
-    """Indices (into stats arrays) of keys that currently sit in the table A."""
+    """Indices (into stats arrays) of keys that currently sit in the table A.
+
+    Sorted-table binary search — O(K log A) instead of ``np.isin``'s
+    O((K+A) log (K+A)) — computed once per planner call (Mixed shares the
+    result across its trials via ``PlannerContext``).
+    """
     if not assignment.table:
         return np.zeros((0,), dtype=np.int64)
     tkeys = np.fromiter(assignment.table.keys(), dtype=np.int64,
                         count=len(assignment.table))
-    return np.flatnonzero(np.isin(stats.keys, tkeys))
+    tkeys.sort()
+    pos = np.clip(np.searchsorted(tkeys, stats.keys), 0, len(tkeys) - 1)
+    return np.flatnonzero(tkeys[pos] == stats.keys)

@@ -66,6 +66,11 @@ class BalanceConfig:
     rel_eps: float = 1e-9
     # safety valve for the LLFD exchange cascade (see llfd.py)
     max_llfd_events: int = 1_000_000
+    # head/tail split (llfd.py): keys with c(k) >= head_fraction * mean load
+    # (plus all current table keys) get exact LLFD/Adjust placement; the tail
+    # stays frozen on its hash destinations as pre-aggregated base loads.
+    # 0.0 = every key is head (exact planner, pre-split behavior).
+    head_fraction: float = 0.0
 
     def l_max(self, mean_load: float) -> float:
         return (1.0 + self.theta_max) * mean_load * (1.0 + self.rel_eps) + 1e-12
@@ -149,6 +154,20 @@ class RebalanceResult:
     feasible_table: bool              # |A'| <= A_max ?
     plan_time_s: float = 0.0          # wall time to produce the plan
     meta: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def same_plan(self, other: "RebalanceResult") -> bool:
+        """Bit-identical plan equality: table, moved keys, loads and theta.
+
+        Used by the planner parity suite and ``benchmarks/planner_scaling.py``
+        to prove the array-native planner reproduces the scalar oracle
+        exactly (timing fields and meta are intentionally ignored).
+        """
+        return (self.assignment.table == other.assignment.table
+                and np.array_equal(np.sort(self.moved_keys),
+                                   np.sort(other.moved_keys))
+                and np.array_equal(self.loads, other.loads)
+                and self.theta == other.theta
+                and self.table_size == other.table_size)
 
 
 Algorithm = Callable[[KeyStats, Assignment, BalanceConfig], RebalanceResult]

@@ -50,23 +50,29 @@ class RebalanceController:
     """Owns the assignment function F and updates it at interval boundaries."""
 
     def __init__(self, assignment: Assignment, config: BalanceConfig,
-                 algorithm: str = "mixed",
+                 algorithm="mixed",
                  executor: Optional[MigrationExecutor] = None):
-        if algorithm not in ALGORITHMS:
-            raise ValueError(f"unknown algorithm {algorithm!r}; "
-                             f"choose from {sorted(ALGORITHMS)}")
+        if callable(algorithm):
+            # custom planner (e.g. functools.partial over extra knobs, or the
+            # scalar reference oracle for an A/B run) with the standard
+            # (stats, assignment, config) -> RebalanceResult signature
+            self.algorithm_name = getattr(algorithm, "__name__", "custom")
+            self._algorithm = algorithm
+        else:
+            if algorithm not in ALGORITHMS:
+                raise ValueError(f"unknown algorithm {algorithm!r}; "
+                                 f"choose from {sorted(ALGORITHMS)}")
+            self.algorithm_name = algorithm
+            self._algorithm = ALGORITHMS[algorithm]
         self.assignment = assignment
         self.config = config
-        self.algorithm_name = algorithm
-        self._algorithm = ALGORITHMS[algorithm]
         self.executor = executor
         self.history: List[ControllerEvent] = []
         self._interval = 0
 
     # -- paper step 2: trigger decision --------------------------------------
     def should_trigger(self, stats: KeyStats) -> bool:
-        loads = metrics.loads(stats, self.assignment)
-        return metrics.theta(loads) > self.config.theta_max
+        return metrics.theta_for(stats, self.assignment) > self.config.theta_max
 
     # -- paper step 1: array-native measurement handoff -----------------------
     def observe(self, keys: np.ndarray, cost: np.ndarray, mem: np.ndarray,
@@ -86,8 +92,7 @@ class RebalanceController:
     # -- paper steps 2-7 ------------------------------------------------------
     def on_interval(self, stats: KeyStats, force: bool = False) -> ControllerEvent:
         self._interval += 1
-        loads = metrics.loads(stats, self.assignment)
-        th = metrics.theta(loads)
+        th = metrics.theta_for(stats, self.assignment)
         if not force and th <= self.config.theta_max:
             ev = ControllerEvent(self._interval, False, th)
             self.history.append(ev)

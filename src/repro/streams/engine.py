@@ -116,6 +116,7 @@ class KeyedStage:
         self._pending_delta_arr: Optional[np.ndarray] = None
         self._migrated_bytes_pending = 0.0
         self._plan_time_pending = 0.0
+        self._table_capacity = 0      # pallas routing-table pad, high-water mark
         if substrate == "pallas":
             self._init_pallas()
         # wire the migration executor (paper steps 5-6)
@@ -276,9 +277,16 @@ class KeyedStage:
             assignment = self.controller.assignment
             # pad the table to a stable capacity (next power of two, >= 128):
             # routing_lookup is jitted on the table shape, so size-exact
-            # padding would retrace on every rebalance that resizes the table
-            a_max = max(128, 1 << max(0, assignment.table_size - 1).bit_length())
-            tk, td = assignment.table_arrays(a_max)
+            # padding would retrace on every rebalance that resizes the table.
+            # The capacity is a per-stage high-water mark — recomputing it
+            # from the current table_size would shrink it again when the
+            # table shrinks, so a table oscillating across a power-of-two
+            # boundary (e.g. 128<->129 under Mixed churn) would retrace the
+            # kernel every interval.
+            needed = max(128, 1 << max(0, assignment.table_size - 1).bit_length())
+            if needed > self._table_capacity:
+                self._table_capacity = needed
+            tk, td = assignment.table_arrays(self._table_capacity)
             out = self._kernel_route(
                 self._jnp.asarray(keys.astype(np.int32)),
                 self._jnp.asarray(tk.astype(np.int32)),

@@ -83,8 +83,20 @@ class TaskStateStore:
         return ks
 
     def end_interval(self, interval: int) -> None:
-        for ks in self.keys.values():
+        """Evict expired slices; drop keys whose window fully emptied.
+
+        Keys must not linger once every slice expired: an empty
+        :class:`KeyState` contributes nothing to S(k,w) but would stay in
+        ``self.keys`` forever, growing the step-1 stat universe (and thus
+        planner input) monotonically on long runs.
+        """
+        dead = []
+        for k, ks in self.keys.items():
             ks.evict_before(interval)
+            if not ks.slices:
+                dead.append(k)
+        for k in dead:
+            del self.keys[k]
 
     def end_interval_collect(self, interval: int
                              ) -> Tuple[np.ndarray, np.ndarray]:
@@ -92,22 +104,27 @@ class TaskStateStore:
 
         Fuses :meth:`end_interval` with :meth:`sizes_arrays` so the
         vectorized engine touches each key once per interval boundary instead
-        of twice; produces exactly the values the two separate calls would.
+        of twice; produces exactly the values the two separate calls would —
+        including dropping (and not reporting) keys left with no slices.
         """
-        n = len(self.keys)
-        keys_arr = np.fromiter(self.keys.keys(), dtype=np.int64, count=n)
-        sizes = np.empty(n, dtype=np.float64)
-        for i, ks in enumerate(self.keys.values()):
+        keys_out = []
+        sizes_out = []
+        dead = []
+        for k, ks in self.keys.items():
+            ks.evict_before(interval)
             slices = ks.slices
             if not slices:
-                sizes[i] = 0.0
+                dead.append(k)
                 continue
-            ks.evict_before(interval)
             total = 0.0
             for sl in slices.values():
                 total += sl.size
-            sizes[i] = total
-        return keys_arr, sizes
+            keys_out.append(k)
+            sizes_out.append(total)
+        for k in dead:
+            del self.keys[k]
+        return (np.asarray(keys_out, dtype=np.int64),
+                np.asarray(sizes_out, dtype=np.float64))
 
     def sizes(self) -> Dict[int, float]:
         return {k: ks.total_size() for k, ks in self.keys.items()}

@@ -7,6 +7,7 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core.balancer import (Assignment, BalanceConfig, KeyStats, ModHash,
                                  metrics, mintable, minmig, mixed, mixed_bf,
+                                 reference_mintable, reference_minmig,
                                  simple, readj)
 from repro.streams.generator import WorkloadGen
 
@@ -177,6 +178,75 @@ def test_mixed_bf_not_worse_than_mixed():
     res_mx = mixed(stats2, res0.assignment, cfg)
     assert (not res_bf.feasible_table, res_bf.migration_cost) <= \
            (not res_mx.feasible_table, res_mx.migration_cost + 1e-9)
+
+
+@st.composite
+def oversized_instances(draw):
+    """One key heavier than every other key combined + a uniform light tail.
+
+    This is the regime outside the paper's Theorem 1/2 preconditions
+    (c(k1) >= mean load), constructed so the light tail always fits: the
+    oversized key must take LLFD's relaxed-(iii) fallback, and under an
+    exhausted event budget every key takes it.
+    """
+    seed = draw(st.integers(0, 2**31 - 1))
+    k = draw(st.integers(20, 200))
+    n_dest = draw(st.integers(2, 8))
+    factor = draw(st.floats(1.5, 4.0))
+    rng = np.random.default_rng(seed)
+    light = rng.uniform(0.5, 1.5, size=k)
+    cost = np.concatenate([light, [factor * light.sum()]])
+    mem = rng.uniform(0.5, 1.5, size=k + 1)
+    stats = KeyStats(keys=np.arange(k + 1, dtype=np.int64), cost=cost, mem=mem)
+    assignment = Assignment(ModHash(n_dest, seed=seed % 11))
+    return stats, assignment
+
+
+def _assert_fallback_invariants(stats, assignment, res, cfg):
+    mean = float(stats.cost.sum()) / assignment.n_dest
+    l_max = cfg.l_max(mean)
+    c_max = float(stats.cost.max())
+    # no key lost: every key resolves to a live destination and the reported
+    # loads are exactly the recomputed per-destination cost sums
+    dests = res.assignment.dest(stats.keys)
+    assert int(dests.min()) >= 0 and int(dests.max()) < assignment.n_dest
+    np.testing.assert_array_equal(
+        metrics.loads_for(stats, dests, assignment.n_dest), res.loads)
+    assert float(res.loads.sum()) == pytest.approx(float(stats.cost.sum()))
+    # the oversized destination carries no more than the oversized key
+    # demands; every other destination respects L_max
+    assert float(res.loads.max()) <= max(l_max, c_max) * (1 + 1e-9)
+
+
+@settings(max_examples=40, deadline=None)
+@given(oversized_instances())
+def test_llfd_oversized_key_fallback(inst):
+    """The relaxed-(iii) fallback terminates, loses no key, and bounds every
+    load by max(L_max, c_max); the array planner matches the scalar oracle
+    on this path too."""
+    stats, assignment = inst
+    cfg = BalanceConfig(theta_max=0.08, table_max=10**9)
+    for algo in (mintable, minmig, mixed):
+        res = algo(stats, assignment, cfg)
+        _assert_fallback_invariants(stats, assignment, res, cfg)
+    assert mintable(stats, assignment, cfg).same_plan(
+        reference_mintable(stats, assignment, cfg))
+
+
+@settings(max_examples=30, deadline=None)
+@given(oversized_instances(), st.integers(0, 3))
+def test_llfd_event_budget_exhaustion(inst, budget):
+    """With the event budget exhausted every candidate takes the fallback:
+    the cascade still terminates (each shed key is strictly lighter than the
+    key displacing it), no key is lost, and loads stay bounded."""
+    stats, assignment = inst
+    cfg = BalanceConfig(theta_max=0.08, table_max=10**9,
+                        max_llfd_events=budget)
+    for algo in (mintable, minmig, mixed):
+        res = algo(stats, assignment, cfg)
+        _assert_fallback_invariants(stats, assignment, res, cfg)
+    assert minmig(stats, assignment, cfg).same_plan(
+        reference_minmig(stats, assignment, cfg))
 
 
 def test_readj_slower_than_mixed_on_many_keys():

@@ -1,0 +1,73 @@
+"""Regression: fully-evicted keys must leave the state store (and the stat
+universe) instead of accumulating forever.
+
+Before the fix, a key whose window slices all expired kept an empty
+``KeyState`` in ``TaskStateStore.keys``, so ``end_interval_collect`` /
+``sizes_arrays`` and the step-1 stat universe grew monotonically on long
+runs with churning key populations, inflating planner input without bound.
+"""
+
+import numpy as np
+
+from repro.core import (Assignment, BalanceConfig, ModHash,
+                        RebalanceController)
+from repro.streams import KeyedStage, WordCount
+from repro.streams.state import TaskStateStore
+
+
+def test_store_drops_fully_evicted_keys():
+    store = TaskStateStore(window=2)
+    store.state(7).slice_for(1, dict, size=4.0)
+    store.state(9).slice_for(2, dict, size=2.0)
+    store.end_interval(2)                      # key 7 still in window (w=2)
+    assert set(store.keys) == {7, 9}
+    store.end_interval(3)                      # key 7's last slice expires
+    assert set(store.keys) == {9}
+    store.end_interval(5)
+    assert not store.keys
+
+
+def test_collect_drops_and_reports_consistently():
+    store = TaskStateStore(window=1)
+    store.state(1).slice_for(1, dict, size=3.0)
+    store.state(2).slice_for(2, dict, size=5.0)
+    keys, sizes = store.end_interval_collect(2)  # key 1 expired, key 2 lives
+    assert keys.tolist() == [2]
+    assert sizes.tolist() == [5.0]
+    assert set(store.keys) == {2}
+    keys, sizes = store.end_interval_collect(3)
+    assert keys.size == 0 and sizes.size == 0
+    assert not store.keys
+
+
+def _make_stage(vectorized, n_tasks=4, window=2):
+    controller = RebalanceController(
+        Assignment(ModHash(n_tasks, seed=1)),
+        BalanceConfig(theta_max=0.08, table_max=200, window=window),
+        algorithm="mixed")
+    return KeyedStage(WordCount(), controller, window=window,
+                      vectorized=vectorized)
+
+
+def test_long_run_state_keys_stay_bounded():
+    """Disjoint key waves per interval: live state is at most `window` waves'
+    worth of keys, in both engine paths, no matter how many intervals ran."""
+    wave = 64
+    window = 2
+    stages = [_make_stage(v, window=window) for v in (True, False)]
+    rng = np.random.default_rng(0)
+    for iv in range(12):
+        base = iv * wave
+        keys = rng.integers(base, base + wave, size=600).astype(np.int64)
+        for stage in stages:
+            stage.process_interval_arrays(keys.copy(), None)
+        bound = window * wave
+        for stage in stages:
+            assert stage.total_state_keys() <= bound, iv
+    vec, ref = stages
+    # the leak fix keeps the two engine paths in lockstep
+    assert vec.total_state_keys() == ref.total_state_keys()
+    for rv, rr in zip(vec.reports, ref.reports):
+        assert rv.tuples == rr.tuples
+        assert rv.table_size == rr.table_size
+        np.testing.assert_array_equal(rv.task_loads, rr.task_loads)
