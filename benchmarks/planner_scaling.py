@@ -187,9 +187,16 @@ def main() -> None:
                          "the reference A/B and the parity check in seconds")
     ap.add_argument("--out", default=None,
                     help="write JSON here instead of stdout")
+    ap.add_argument("--ks", default=None,
+                    help="comma-separated explicit K sweep (overrides "
+                         "--full/--smoke); the committed CI baseline is "
+                         "generated with --ks 5000,10000,30000,100000 so it "
+                         "is a superset of the --smoke points (see "
+                         "check_perf_gate.py)")
     args = ap.parse_args()
+    ks = ([int(x) for x in args.ks.split(",")] if args.ks else None)
     t0 = time.time()
-    result = run(full=args.full, smoke=args.smoke)
+    result = run(ks=ks, full=args.full, smoke=args.smoke)
     result["wall_s"] = time.time() - t0
     if not result["parity_all_ok"]:
         print("PARITY FAILURE: array planner diverged from reference",

@@ -15,6 +15,7 @@ MODULES = [
     "fig14_realdata", "fig15_scaleout", "fig16_tpch", "fig17_table_size",
     "fig18_table_growth", "fig19_window", "fig20_beta",
     "moe_skewshield", "kernels_bench", "engine_fastpath", "planner_scaling",
+    "topology_pipeline",
 ]
 
 
@@ -26,17 +27,27 @@ def main() -> None:
     args = ap.parse_args()
     mods = MODULES if not args.only else [
         m for m in MODULES if any(o in m for o in args.only.split(","))]
+    if args.only and not mods:
+        print(f"# no module matches --only={args.only}", file=sys.stderr)
+        sys.exit(2)
     print("name,us_per_call,derived")
+    failed = []
     for mod_name in mods:
-        mod = importlib.import_module(f"benchmarks.{mod_name}")
         t0 = time.time()
         try:
+            mod = importlib.import_module(f"benchmarks.{mod_name}")
             for name, us, derived in mod.rows(quick=not args.full):
                 print(f"{name},{us:.1f},{derived}", flush=True)
         except Exception as e:  # noqa: BLE001
             print(f"{mod_name}/ERROR,0,{type(e).__name__}: {e}",
                   file=sys.stderr, flush=True)
+            failed.append(mod_name)
         print(f"# {mod_name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+    if failed:
+        # non-zero exit so CI gates on the suite instead of silently passing
+        print(f"# FAILED modules ({len(failed)}): {','.join(failed)}",
+              file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

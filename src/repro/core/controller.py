@@ -74,10 +74,20 @@ class RebalanceController:
     def should_trigger(self, stats: KeyStats) -> bool:
         return metrics.theta_for(stats, self.assignment) > self.config.theta_max
 
+    def triggered_intervals(self) -> List[int]:
+        """Intervals (1-based) where this controller actually rebalanced.
+
+        In a multi-stage topology every stage owns one controller, so
+        intersecting these lists across stages shows rebalances firing at
+        different operators within the same interval (the per-operator
+        protocol of the paper's Fig. 5)."""
+        return [ev.interval for ev in self.history if ev.triggered]
+
     # -- paper step 1: array-native measurement handoff -----------------------
     def observe(self, keys: np.ndarray, cost: np.ndarray, mem: np.ndarray,
                 freq: Optional[np.ndarray] = None,
-                force: bool = False) -> ControllerEvent:
+                force: bool = False,
+                interval: Optional[int] = None) -> ControllerEvent:
         """Ingest pre-aggregated per-key arrays and run one protocol round.
 
         This is the vectorized engine's entry point (and the natural one for
@@ -87,11 +97,18 @@ class RebalanceController:
         themselves. Equivalent to ``on_interval(KeyStats(...), force)``.
         """
         return self.on_interval(
-            KeyStats(keys=keys, cost=cost, mem=mem, freq=freq), force=force)
+            KeyStats(keys=keys, cost=cost, mem=mem, freq=freq), force=force,
+            interval=interval)
 
     # -- paper steps 2-7 ------------------------------------------------------
-    def on_interval(self, stats: KeyStats, force: bool = False) -> ControllerEvent:
-        self._interval += 1
+    def on_interval(self, stats: KeyStats, force: bool = False,
+                    interval: Optional[int] = None) -> ControllerEvent:
+        """One protocol round. ``interval`` pins the recorded event to the
+        caller's interval clock (the stream engine passes its own counter so
+        ControllerEvent.interval stays aligned even when some intervals
+        produce no stats and skip the controller entirely); None keeps the
+        self-incrementing counter for callers without one."""
+        self._interval = self._interval + 1 if interval is None else interval
         th = metrics.theta_for(stats, self.assignment)
         if not force and th <= self.config.theta_max:
             ev = ControllerEvent(self._interval, False, th)

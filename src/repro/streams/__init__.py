@@ -1,14 +1,17 @@
-"""Faithful stream-processing substrate: engine, operators, state, generator."""
+"""Faithful stream-processing substrate: engine, operators, state, generator,
+and multi-stage topologies."""
 
 from .engine import SUBSTRATES, IntervalReport, KeyedStage
 from .generator import WorkloadGen, zipf_frequencies
-from .operators import (BatchResult, MergeCounts, Operator, PartialWordCount,
-                        WindowedSelfJoin, WordCount)
+from .operators import (BatchResult, Filter, MergeCounts, Operator,
+                        PartialWordCount, WindowedSelfJoin, WordCount)
 from .state import KeyState, TaskStateStore
+from .topology import StageSpec, Topology, TopologyReport, keyed_stage
 
 __all__ = [
     "SUBSTRATES", "IntervalReport", "KeyedStage", "WorkloadGen",
-    "zipf_frequencies", "BatchResult", "MergeCounts", "Operator",
+    "zipf_frequencies", "BatchResult", "Filter", "MergeCounts", "Operator",
     "PartialWordCount", "WindowedSelfJoin", "WordCount", "KeyState",
-    "TaskStateStore",
+    "TaskStateStore", "StageSpec", "Topology", "TopologyReport",
+    "keyed_stage",
 ]

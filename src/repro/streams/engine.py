@@ -28,6 +28,12 @@ implementation; ``tests/test_engine_parity.py`` proves the two produce
 identical :class:`IntervalReport` streams, and
 ``benchmarks/engine_fastpath.py`` measures the speedup.
 
+Multi-stage topologies chain stages through
+:meth:`KeyedStage.process_interval_emits`, which additionally returns the
+operator's full emit stream as ``(keys, values)`` arrays in canonical
+source-position order (see :mod:`repro.streams.topology` and the batched
+emit contract in :mod:`repro.streams.operators`).
+
 Substrate flag
 --------------
 ``substrate="numpy"`` (default) computes routing and stats on host numpy.
@@ -183,6 +189,31 @@ class KeyedStage:
         False). This is the zero-conversion path used by the benchmarks."""
         if not self.vectorized:
             return self._process_interval_reference(keys, values)
+        return self._process_interval_vectorized(keys, values)
+
+    def process_interval_emits(self, keys: np.ndarray,
+                               values: Optional[Sequence[Any]] = None
+                               ) -> Tuple[IntervalReport, np.ndarray,
+                                          np.ndarray]:
+        """Process one interval and also return the operator's emit stream.
+
+        Returns ``(report, emit_keys, emit_values)``. Emits are ordered by
+        source-tuple position (the fan-out emits of one tuple stay adjacent,
+        in emit order) — per-key state only depends on that key's own tuple
+        order, which pause/replay preserves, so BOTH engine paths produce
+        this exact stream. That canonical order is what makes chained stages
+        parity-testable; it is the stage-to-stage hand-off used by
+        :class:`repro.streams.topology.Topology`.
+        """
+        if not self.vectorized:
+            return self._process_interval_reference(keys, values,
+                                                    collect_emits=True)
+        return self._process_interval_vectorized(keys, values,
+                                                 collect_emits=True)
+
+    def _process_interval_vectorized(self, keys: np.ndarray,
+                                     values: Optional[Sequence[Any]] = None,
+                                     collect_emits: bool = False):
         self._interval += 1
         iv = self._interval
         n = int(keys.shape[0])
@@ -190,6 +221,8 @@ class KeyedStage:
         acc_keys: List[np.ndarray] = []
         acc_cost: List[np.ndarray] = []
         acc_freq: List[np.ndarray] = []
+        emit_acc: Optional[List[Tuple[np.ndarray, np.ndarray, np.ndarray]]] = \
+            [] if collect_emits else None
         buffered_count = 0
 
         dests = self._dest_batch(keys) if n else np.zeros(0, np.int64)
@@ -213,16 +246,17 @@ class KeyedStage:
             kept = head[~paused]
             if kept.size:
                 self._process_batch(iv, keys[kept], dests[kept], kept, values,
-                                    task_cost, acc_keys, acc_cost, acc_freq)
+                                    task_cost, acc_keys, acc_cost, acc_freq,
+                                    emit_acc)
             resume = np.concatenate([head[paused], np.arange(pause_hi, n)])
             if resume.size:
                 self._process_batch(iv, keys[resume], dests[resume], resume,
                                     values, task_cost, acc_keys, acc_cost,
-                                    acc_freq)
+                                    acc_freq, emit_acc)
         elif n:
             idx = np.arange(n)
             self._process_batch(iv, keys, dests, idx, values, task_cost,
-                                acc_keys, acc_cost, acc_freq)
+                                acc_keys, acc_cost, acc_freq, emit_acc)
         self._pending_delta = None
         self._pending_delta_arr = None
 
@@ -230,11 +264,30 @@ class KeyedStage:
 
         stats = self._collect_stats_vectorized(acc_keys, acc_cost, acc_freq,
                                                held)
-        return self._finish_interval(iv, n, task_cost, buffered_count, stats)
+        report = self._finish_interval(iv, n, task_cost, buffered_count, stats)
+        if not collect_emits:
+            return report
+        ekeys, evals = self._assemble_emits(emit_acc)
+        return report, ekeys, evals
+
+    @staticmethod
+    def _assemble_emits(emit_acc) -> Tuple[np.ndarray, np.ndarray]:
+        """Order accumulated (positions, keys, values) chunks into the
+        canonical source-position emit stream. Positions are unique per
+        source tuple across chunks, and one tuple's emits are contiguous
+        within a chunk, so a stable argsort reproduces stream order."""
+        if not emit_acc:
+            return np.zeros(0, np.int64), np.zeros(0, np.float64)
+        pos = np.concatenate([p for p, _, _ in emit_acc])
+        ekeys = np.concatenate([k for _, k, _ in emit_acc])
+        evals = np.concatenate([v for _, _, v in emit_acc])
+        order = np.argsort(pos, kind="stable")
+        return ekeys[order], evals[order]
 
     def _process_batch(self, iv: int, bkeys: np.ndarray, bdests: np.ndarray,
                        abs_idx: np.ndarray, values: Optional[Sequence[Any]],
-                       task_cost, acc_keys, acc_cost, acc_freq) -> None:
+                       task_cost, acc_keys, acc_cost, acc_freq,
+                       emit_acc=None) -> None:
         """Partition one micro-batch per task via argsort + segment boundaries
         and hand each segment to the operator's batched kernel."""
         order = np.argsort(bdests, kind="stable")
@@ -257,7 +310,15 @@ class KeyedStage:
                     vseg = values_arr[abs_idx[seg]]
                 else:
                     vseg = [values[i] for i in abs_idx[seg]]
-            res = self.operator.process_batch(self.stores[d], iv, kseg, vseg)
+            if emit_acc is None:
+                res = self.operator.process_batch(self.stores[d], iv, kseg,
+                                                  vseg)
+            else:
+                res, ecounts, ekeys, evals = self.operator.process_batch_emits(
+                    self.stores[d], iv, kseg, vseg)
+                if ekeys.size:
+                    emit_acc.append((np.repeat(abs_idx[seg], ecounts),
+                                     ekeys, evals))
             task_cost[d] += res.task_cost
             acc_keys.append(res.uniq_keys)
             acc_cost.append(res.key_cost)
@@ -373,15 +434,18 @@ class KeyedStage:
         self._plan_time_pending = 0.0
         if stats is not None:
             self.last_stats = stats
-            ev = self.controller.on_interval(stats)
+            # pin the event to the STAGE interval: a stats-free interval
+            # (no tuples, no held state) skips the controller, and its
+            # private counter would silently lag the stage clock otherwise
+            ev = self.controller.on_interval(stats, interval=iv)
             if ev.result is not None:
                 self._plan_time_pending = ev.result.plan_time_s
         return report
 
     # -- reference per-tuple path (parity oracle; vectorized=False) ------------
     def _process_interval_reference(self, keys: np.ndarray,
-                                    values: Optional[Sequence[Any]]
-                                    ) -> IntervalReport:
+                                    values: Optional[Sequence[Any]],
+                                    collect_emits: bool = False):
         self._interval += 1
         iv = self._interval
         n = int(keys.shape[0])
@@ -391,8 +455,10 @@ class KeyedStage:
         task_cost = np.zeros(self.n_tasks)
         key_cost: Dict[int, float] = defaultdict(float)
         key_freq: Dict[int, float] = defaultdict(float)
-        buffer: List[Tuple[int, Any]] = []
+        buffer: List[Tuple[int, int, Any]] = []      # (position, key, value)
         buffered_count = 0
+        emit_log: Optional[List[Tuple[int, int, Any]]] = \
+            [] if collect_emits else None
 
         dests = self._dest_batch(keys) if n else np.zeros(0, np.int64)
 
@@ -403,26 +469,28 @@ class KeyedStage:
                          and b < self.migration_batches)
             if not migrating and buffer:
                 # Resume: replay buffered tuples with the CURRENT assignment
-                for k, v in buffer:
+                for pos, k, v in buffer:
                     d = int(self.controller.assignment.dest(
                         np.asarray([k], dtype=np.int64))[0])
-                    self._run_one(d, iv, k, v, task_cost, key_cost, key_freq)
+                    self._run_one(d, iv, k, v, pos, task_cost, key_cost,
+                                  key_freq, emit_log)
                 buffer.clear()
                 self._pending_delta = None
                 self._pending_delta_arr = None
             for i in range(lo, hi):
                 k, v = int(keys[i]), vals[i]
                 if migrating and k in self._pending_delta:
-                    buffer.append((k, v))           # Pause: cache locally
+                    buffer.append((i, k, v))        # Pause: cache locally
                     buffered_count += 1
                     continue
-                self._run_one(int(dests[i]), iv, k, v, task_cost, key_cost,
-                              key_freq)
+                self._run_one(int(dests[i]), iv, k, v, i, task_cost, key_cost,
+                              key_freq, emit_log)
         if buffer:                                   # traffic ended mid-pause
-            for k, v in buffer:
+            for pos, k, v in buffer:
                 d = int(self.controller.assignment.dest(
                     np.asarray([k], dtype=np.int64))[0])
-                self._run_one(d, iv, k, v, task_cost, key_cost, key_freq)
+                self._run_one(d, iv, k, v, pos, task_cost, key_cost, key_freq,
+                              emit_log)
             buffer.clear()
         self._pending_delta = None
         self._pending_delta_arr = None
@@ -431,10 +499,18 @@ class KeyedStage:
             store.end_interval(iv)
 
         stats = self._collect_stats(key_cost, key_freq)
-        return self._finish_interval(iv, n, task_cost, buffered_count, stats)
+        report = self._finish_interval(iv, n, task_cost, buffered_count, stats)
+        if not collect_emits:
+            return report
+        # canonical order = source position (replays keep their original
+        # position, and a tuple's emits were appended contiguously)
+        emit_log.sort(key=lambda t: t[0])
+        ekeys = np.asarray([k for _, k, _ in emit_log], dtype=np.int64)
+        evals = np.asarray([v for _, _, v in emit_log])
+        return report, ekeys, evals
 
-    def _run_one(self, d: int, interval: int, key: int, value: Any,
-                 task_cost, key_cost, key_freq) -> None:
+    def _run_one(self, d: int, interval: int, key: int, value: Any, pos: int,
+                 task_cost, key_cost, key_freq, emit_log=None) -> None:
         outs, cost = self.operator.process(self.stores[d], interval, key, value)
         task_cost[d] += cost
         key_cost[key] += cost
@@ -443,6 +519,8 @@ class KeyedStage:
             self.outputs[ok] = ov
             if isinstance(ov, (int, float)):
                 self.emitted_sum += float(ov)
+            if emit_log is not None:
+                emit_log.append((pos, ok, ov))
 
     def _collect_stats(self, key_cost, key_freq) -> Optional[KeyStats]:
         # Paper step 1: every instance reports c(k) AND S(k,w) for each key

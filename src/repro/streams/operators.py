@@ -22,6 +22,21 @@ operators only need ``process``; the base-class ``process_batch`` falls back
 to the per-tuple loop, so they stay correct (just not fast) under the
 vectorized engine. Set ``needs_values = False`` on operators that ignore
 tuple payloads so the engine can skip materializing per-segment value lists.
+
+Batched emit contract (topologies)
+----------------------------------
+In a multi-stage :class:`repro.streams.topology.Topology` a stage's emits
+become the next stage's input tuples, so the engine needs the *full* emit
+stream — not just the last-wins ``outputs`` summary that single-stage
+callers read. :meth:`Operator.process_batch_emits` is that contract: it
+performs exactly one state update per unique key (same as ``process_batch``)
+and additionally returns ``(emit_counts, emit_keys, emit_values)`` arrays —
+``emit_counts[i]`` emits for the i-th input tuple, listed in input order.
+Fan-out may be 0 (:class:`Filter` drops tuples), 1 (the aggregations), or
+more (custom operators via the per-tuple fallback). The built-ins derive
+the per-occurrence emit values in closed form — the j-th tuple of a key in
+a segment emits an arithmetic-progression term — so chaining stages keeps
+the no-per-tuple-Python property end to end.
 """
 
 from __future__ import annotations
@@ -61,6 +76,37 @@ class BatchResult:
     emit_sum: float
 
 
+def _occurrence_index(inv: np.ndarray, counts: np.ndarray) -> np.ndarray:
+    """occ[i] = how many earlier tuples in the segment share keys[i]'s key.
+
+    Lets the closed-form operators reconstruct per-occurrence emits (the
+    j-th hit of a key emits the j-th term of that key's progression) without
+    a per-tuple loop: stable-sort positions by group, subtract group starts.
+    """
+    order = np.argsort(inv, kind="stable")
+    starts = np.concatenate(([0], np.cumsum(counts)[:-1]))
+    occ = np.empty(inv.size, dtype=np.int64)
+    occ[order] = np.arange(inv.size, dtype=np.int64) - np.repeat(starts, counts)
+    return occ
+
+
+def _numeric_emit_sum(vals) -> float:
+    """Sum of emitted values the per-tuple path counts as numeric.
+
+    The reference loop's rule is ``isinstance(v, (int, float))``: numpy
+    float scalars are ``float`` subclasses but numpy integer scalars are NOT
+    ``int`` subclasses, so float arrays sum and integer/bool arrays
+    contribute nothing. Matching that here keeps ``emitted_sum`` bit-equal
+    between the batched and per-tuple paths for pass-through operators.
+    """
+    if isinstance(vals, np.ndarray):
+        if vals.dtype.kind == "f":
+            return float(vals.sum())
+        if vals.dtype.kind in "iub":
+            return 0.0
+    return float(sum(float(v) for v in vals if isinstance(v, (int, float))))
+
+
 def _group_values(inv: np.ndarray, counts: np.ndarray,
                   values: Sequence[Any]) -> List[List[Any]]:
     """Split ``values`` into per-unique-key lists (stream order preserved)."""
@@ -91,32 +137,62 @@ class Operator:
         """Process one task's micro-batch segment; default per-tuple fallback.
 
         Semantically equivalent to calling :meth:`process` for each tuple in
-        stream order. Built-in operators override this with vectorized
-        closed forms; custom operators inherit this loop and remain correct.
+        stream order — delegates to :meth:`process_batch_emits` (one shared
+        accumulation loop) and drops the emit stream. Built-in operators
+        override both with vectorized closed forms; custom operators inherit
+        the loop and remain correct.
+        """
+        res, _, _, _ = self.process_batch_emits(store, interval, keys, values)
+        return res
+
+    def process_batch_emits(self, store: TaskStateStore, interval: int,
+                            keys: np.ndarray,
+                            values: Optional[Sequence[Any]]
+                            ) -> Tuple[BatchResult, np.ndarray, np.ndarray,
+                                       np.ndarray]:
+        """Like :meth:`process_batch`, plus the full emit stream.
+
+        Returns ``(result, emit_counts, emit_keys, emit_values)``:
+        ``emit_counts`` is (len(keys),) int64 — emits produced by each input
+        tuple; ``emit_keys``/``emit_values`` list those emits in input order
+        (all emits of tuple i precede those of tuple i+1, each a scalar).
+        The engine uses this to hand a stage's output to the next stage of a
+        Topology as arrays. The state update happens exactly once — callers
+        invoke either this or ``process_batch``, never both. Default:
+        per-tuple fallback; built-ins override with closed forms.
         """
         key_cost: dict = {}
         key_freq: dict = {}
         outputs: dict = {}
         emit = 0.0
         total = 0.0
-        vals = values if values is not None else [None] * len(keys)
-        for k, v in zip(keys.tolist(), vals):
+        n = len(keys)
+        counts = np.zeros(n, dtype=np.int64)
+        ekeys: List[int] = []
+        evals: List[Any] = []
+        vals = values if values is not None else [None] * n
+        for i, (k, v) in enumerate(zip(keys.tolist(), vals)):
             outs, cost = self.process(store, interval, k, v)
             total += cost
             key_cost[k] = key_cost.get(k, 0.0) + cost
             key_freq[k] = key_freq.get(k, 0.0) + 1.0
+            counts[i] = len(outs)
             for ok, ov in outs:
                 outputs[ok] = ov
+                ekeys.append(ok)
+                evals.append(ov)
                 if isinstance(ov, (int, float)):
                     emit += float(ov)
         uniq = np.fromiter(sorted(key_cost), dtype=np.int64, count=len(key_cost))
-        return BatchResult(
+        res = BatchResult(
             uniq_keys=uniq,
             key_cost=np.fromiter((key_cost[int(k)] for k in uniq),
                                  dtype=np.float64, count=len(uniq)),
             key_freq=np.fromiter((key_freq[int(k)] for k in uniq),
                                  dtype=np.float64, count=len(uniq)),
             task_cost=total, outputs=list(outputs.items()), emit_sum=emit)
+        return (res, counts, np.asarray(ekeys, dtype=np.int64),
+                np.asarray(evals))
 
 
 class WordCount(Operator):
@@ -134,11 +210,8 @@ class WordCount(Operator):
         total = sum(s.payload["count"] for s in ks.iter_window())
         return [(key, total)], 1.0
 
-    def process_batch(self, store, interval, keys, values):
-        # m tuples on a key whose window already counts c0 emit the running
-        # totals c0+1 .. c0+m; their sum is m*c0 + m(m+1)/2 and the final
-        # (last-wins) emit is c0+m. One state update per unique key.
-        uniq, counts = np.unique(keys, return_counts=True)
+    def _apply_counts(self, store, interval, uniq, counts):
+        """One state update per unique key; returns pre-batch window totals."""
         pairs = store.update_many(interval, uniq, init=lambda: {"count": 0},
                                   size=self.bytes_per_entry)
         c0s = np.empty(len(uniq), dtype=np.int64)
@@ -148,14 +221,33 @@ class WordCount(Operator):
                 c0 += s.payload["count"]
             sl.payload["count"] += m
             c0s[i] = c0
+        return c0s
+
+    def _batch_result(self, uniq, counts, c0s, n):
         # emits per key are the running totals c0+1 .. c0+m: their sum and
-        # the final value are exact integer arithmetic, done array-wide
+        # the final (last-wins) value are exact integer arithmetic
         totals = c0s + counts
         outputs = list(zip(uniq.tolist(), totals.tolist()))
         emit = float(np.dot(counts, c0s) + np.dot(counts, counts + 1) / 2.0)
         freq = counts.astype(np.float64)
-        return BatchResult(uniq, freq.copy(), freq, float(len(keys)),
-                           outputs, emit)
+        return BatchResult(uniq, freq.copy(), freq, float(n), outputs, emit)
+
+    def process_batch(self, store, interval, keys, values):
+        # m tuples on a key whose window already counts c0 emit the running
+        # totals c0+1 .. c0+m; one state update per unique key.
+        uniq, counts = np.unique(keys, return_counts=True)
+        c0s = self._apply_counts(store, interval, uniq, counts)
+        return self._batch_result(uniq, counts, c0s, len(keys))
+
+    def process_batch_emits(self, store, interval, keys, values):
+        uniq, inv, counts = np.unique(keys, return_inverse=True,
+                                      return_counts=True)
+        c0s = self._apply_counts(store, interval, uniq, counts)
+        res = self._batch_result(uniq, counts, c0s, len(keys))
+        # the j-th occurrence of a key emits its running total c0 + j
+        evals = c0s[inv] + _occurrence_index(inv, counts) + 1
+        return (res, np.ones(len(keys), dtype=np.int64),
+                keys.astype(np.int64, copy=False), evals)
 
 
 class WindowedSelfJoin(Operator):
@@ -177,17 +269,16 @@ class WindowedSelfJoin(Operator):
         cost = 1.0 + self.probe_cost * matches
         return [(key, matches)], cost
 
-    def process_batch(self, store, interval, keys, values):
+    def _batch_core(self, store, interval, keys, values, uniq, inv, counts):
         # the j-th of m tuples on a key with c0 window entries probes
         # c0 + (j-1) matches, so total probes = m*c0 + m(m-1)/2 and the last
         # emit is c0 + m - 1; cost = m inserts + probe_cost * total probes.
-        uniq, inv, counts = np.unique(keys, return_inverse=True,
-                                      return_counts=True)
         grouped = _group_values(inv, counts, values)
         pairs = store.update_many(interval, uniq, init=list, size=0.0)
         outputs = []
         emit = 0.0
         key_cost = np.empty(len(uniq), dtype=np.float64)
+        c0s = np.empty(len(uniq), dtype=np.int64)
         for u, (k, m, (ks, cur)) in enumerate(
                 zip(uniq.tolist(), counts.tolist(), pairs)):
             c0 = sum(len(sl.payload) for sl in ks.iter_window())
@@ -197,8 +288,27 @@ class WindowedSelfJoin(Operator):
             emit += probes
             outputs.append((k, c0 + m - 1))
             key_cost[u] = m * 1.0 + self.probe_cost * probes
-        return BatchResult(uniq, key_cost, counts.astype(np.float64),
-                           float(key_cost.sum()), outputs, emit)
+            c0s[u] = c0
+        res = BatchResult(uniq, key_cost, counts.astype(np.float64),
+                          float(key_cost.sum()), outputs, emit)
+        return res, c0s
+
+    def process_batch(self, store, interval, keys, values):
+        uniq, inv, counts = np.unique(keys, return_inverse=True,
+                                      return_counts=True)
+        res, _ = self._batch_core(store, interval, keys, values, uniq, inv,
+                                  counts)
+        return res
+
+    def process_batch_emits(self, store, interval, keys, values):
+        uniq, inv, counts = np.unique(keys, return_inverse=True,
+                                      return_counts=True)
+        res, c0s = self._batch_core(store, interval, keys, values, uniq, inv,
+                                    counts)
+        # the j-th occurrence emits its probe-time match count c0 + (j-1)
+        evals = c0s[inv] + _occurrence_index(inv, counts)
+        return (res, np.ones(len(keys), dtype=np.int64),
+                keys.astype(np.int64, copy=False), evals)
 
 
 class PartialWordCount(Operator):
@@ -218,23 +328,38 @@ class PartialWordCount(Operator):
         sl.payload["count"] += 1
         return [(key, sl.payload["count"])], 1.0
 
-    def process_batch(self, store, interval, keys, values):
-        # partial counts reset per interval slice: emits c0+1 .. c0+m where
-        # c0 is the *current slice* count (not the window total).
-        uniq, counts = np.unique(keys, return_counts=True)
+    def _apply_slices(self, store, interval, uniq, counts):
+        """One slice update per unique key; returns pre-batch slice counts."""
         pairs = store.update_many(interval, uniq,
                                   init=lambda: {"count": 0},
                                   size=self.bytes_per_entry)
-        outputs = []
-        emit = 0.0
-        for k, m, (_, sl) in zip(uniq.tolist(), counts.tolist(), pairs):
-            c0 = sl.payload["count"]
-            sl.payload["count"] = c0 + m
-            outputs.append((k, c0 + m))
-            emit += m * c0 + m * (m + 1) / 2.0
+        c0s = np.empty(len(uniq), dtype=np.int64)
+        for i, (m, (_, sl)) in enumerate(zip(counts.tolist(), pairs)):
+            c0s[i] = sl.payload["count"]
+            sl.payload["count"] = c0s[i] + m
+        return c0s
+
+    def _batch_result(self, uniq, counts, c0s, n):
+        # partial counts reset per interval slice: emits c0+1 .. c0+m where
+        # c0 is the *current slice* count (not the window total).
+        outputs = list(zip(uniq.tolist(), (c0s + counts).tolist()))
+        emit = float(np.dot(counts, c0s) + np.dot(counts, counts + 1) / 2.0)
         freq = counts.astype(np.float64)
-        return BatchResult(uniq, freq.copy(), freq, float(len(keys)),
-                           outputs, emit)
+        return BatchResult(uniq, freq.copy(), freq, float(n), outputs, emit)
+
+    def process_batch(self, store, interval, keys, values):
+        uniq, counts = np.unique(keys, return_counts=True)
+        c0s = self._apply_slices(store, interval, uniq, counts)
+        return self._batch_result(uniq, counts, c0s, len(keys))
+
+    def process_batch_emits(self, store, interval, keys, values):
+        uniq, inv, counts = np.unique(keys, return_inverse=True,
+                                      return_counts=True)
+        c0s = self._apply_slices(store, interval, uniq, counts)
+        res = self._batch_result(uniq, counts, c0s, len(keys))
+        evals = c0s[inv] + _occurrence_index(inv, counts) + 1
+        return (res, np.ones(len(keys), dtype=np.int64),
+                keys.astype(np.int64, copy=False), evals)
 
 
 class MergeCounts(Operator):
@@ -267,3 +392,66 @@ class MergeCounts(Operator):
         freq = counts.astype(np.float64)
         return BatchResult(uniq, 0.5 * freq, freq, 0.5 * float(len(keys)),
                            [], 0.0)
+
+    def process_batch_emits(self, store, interval, keys, values):
+        # terminal operator: absorbs partials, emits nothing downstream
+        res = self.process_batch(store, interval, keys, values)
+        return (res, np.zeros(len(keys), dtype=np.int64),
+                np.zeros(0, dtype=np.int64), np.zeros(0, dtype=np.float64))
+
+
+class Filter(Operator):
+    """Stateless selection: forwards tuples whose ``(key, value)`` passes
+    ``predicate``, drops the rest — the 0-or-1 fan-out case of the batched
+    emit contract (a TPC-H-style selection ahead of a keyed join).
+
+    ``predicate(keys, values) -> bool mask`` must be a vectorized,
+    deterministic function of its arguments; the per-tuple path calls it on
+    length-1 arrays, so both engine paths evaluate identical predicates.
+    """
+
+    name = "filter"
+
+    def __init__(self, predicate, cost_per_tuple: float = 0.25):
+        self.predicate = predicate
+        self.cost_per_tuple = cost_per_tuple
+
+    def process(self, store, interval, key, value):
+        keep = bool(np.asarray(self.predicate(
+            np.asarray([key], dtype=np.int64), np.asarray([value])))[0])
+        return ([(key, value)] if keep else []), self.cost_per_tuple
+
+    def process_batch(self, store, interval, keys, values):
+        res, _, _, _ = self.process_batch_emits(store, interval, keys, values)
+        return res
+
+    def process_batch_emits(self, store, interval, keys, values):
+        vals = (values if isinstance(values, np.ndarray)
+                else np.asarray(values if values is not None
+                                else [None] * len(keys)))
+        keep = np.asarray(self.predicate(keys, vals), dtype=bool)
+        kept_k = keys[keep]
+        kept_v = vals[keep]
+        uniq, counts = np.unique(keys, return_counts=True)
+        freq = counts.astype(np.float64)
+        # last-wins outputs over *kept* tuples only, matching the per-tuple
+        # loop (a dropped tuple never reaches the outputs dict)
+        outputs = []
+        if kept_k.size:
+            rev_uniq, rev_first = np.unique(kept_k[::-1], return_index=True)
+            outputs = list(zip(rev_uniq.tolist(),
+                               kept_v[::-1][rev_first].tolist()))
+        # emitted_sum must follow the per-tuple isinstance rule on the
+        # ORIGINAL payloads: a Python list of ints counts, but its int64
+        # ndarray conversion would not — so sum from `values` when the
+        # caller passed a non-ndarray sequence
+        if isinstance(values, np.ndarray) or values is None:
+            emit_sum = _numeric_emit_sum(kept_v)
+        else:
+            emit_sum = _numeric_emit_sum(
+                [values[i] for i in np.nonzero(keep)[0]])
+        res = BatchResult(uniq, self.cost_per_tuple * freq, freq,
+                          self.cost_per_tuple * float(len(keys)), outputs,
+                          emit_sum)
+        return (res, keep.astype(np.int64),
+                kept_k.astype(np.int64, copy=False), kept_v)

@@ -1,0 +1,40 @@
+"""Benchmark bit-rot guard (tier-1).
+
+Every module in ``benchmarks.run.MODULES`` must import and expose a
+``rows(quick)`` callable, and the two cheapest modules actually run in quick
+mode — so a refactor that breaks a figure module fails tier-1 instead of
+only surfacing in the nightly benchmark job.
+
+Requires the repo root on sys.path (as ``python -m pytest`` from the root
+provides); ``benchmarks`` is a namespace package.
+"""
+
+import importlib
+
+import pytest
+
+from benchmarks.run import MODULES
+
+
+@pytest.mark.parametrize("mod_name", MODULES)
+def test_module_imports_and_exposes_rows(mod_name):
+    mod = importlib.import_module(f"benchmarks.{mod_name}")
+    assert callable(getattr(mod, "rows", None)), \
+        f"benchmarks/{mod_name}.py lost its rows() entry point"
+
+
+# the two cheapest figure modules (<0.1 s in quick mode) — cheap enough for
+# tier-1, and they exercise the WorkloadGen + balancer + CSV row shape that
+# every other module shares
+CHEAP_MODULES = ("fig20_beta", "fig19_window")
+
+
+@pytest.mark.parametrize("mod_name", CHEAP_MODULES)
+def test_cheap_module_rows_run_in_quick_mode(mod_name):
+    mod = importlib.import_module(f"benchmarks.{mod_name}")
+    rows = mod.rows(quick=True)
+    assert rows, f"{mod_name}.rows(quick=True) returned no rows"
+    for name, us, derived in rows:
+        assert isinstance(name, str) and name
+        assert isinstance(float(us), float)
+        assert isinstance(derived, str)

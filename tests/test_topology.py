@@ -1,0 +1,274 @@
+"""Multi-stage topology: vectorized pipeline == per-tuple reference pipeline.
+
+The topology chains full KeyedStages — each with its own controller,
+assignment and store fleet — through the batched emit contract
+(``Operator.process_batch_emits`` -> ``KeyedStage.process_interval_emits``).
+On the numpy substrate every per-stage :class:`IntervalReport` must be
+bit-identical between the all-vectorized and all-per-tuple pipelines,
+*including* intervals where rebalances fire at more than one stage at once
+(each stage pausing/replaying its own Delta keys).
+
+Costs are chosen dyadic (WordCount 1.0, MergeCounts 0.5, Filter 0.25,
+self-join probe_cost 1/64) so float summation order cannot introduce ulp
+drift — same discipline as tests/test_engine_parity.py.
+"""
+
+import numpy as np
+import pytest
+
+from repro.streams import (Filter, MergeCounts, StageSpec, Topology,
+                           WindowedSelfJoin, WordCount, WorkloadGen,
+                           keyed_stage)
+
+REPORT_FIELDS = ("interval", "tuples", "makespan", "migration_stall",
+                 "throughput", "skewness", "theta", "migrated_bytes",
+                 "table_size", "buffered")
+
+
+def build_three_stage(vectorized, theta=0.04):
+    """filter -> count -> top-k front (bucketed running max)."""
+    s1 = keyed_stage(Filter(lambda k, v: (k + v) % 4 != 0), n_tasks=5,
+                     theta_max=theta, table_max=300, window=3, seed=0,
+                     vectorized=vectorized)
+    s2 = keyed_stage(WordCount(), n_tasks=6, theta_max=theta, table_max=400,
+                     window=3, seed=1, vectorized=vectorized)
+    s3 = keyed_stage(MergeCounts(), n_tasks=4, theta_max=theta, table_max=200,
+                     window=3, seed=2, vectorized=vectorized)
+    return Topology([
+        StageSpec("filter", s1),
+        StageSpec("count", s2),
+        StageSpec("topk", s3, rekey=lambda k, v: k % 32),
+    ])
+
+
+def drive_topology_pair(builder, intervals=6, tuples=4000, k=800, z=1.1,
+                        f=0.8, gen_seed=3):
+    """Drive vectorized and reference pipelines on identical source streams.
+
+    Fluctuation follows stage 0's live assignment; if the two pipelines'
+    plans ever diverge the drawn streams diverge too, which the assert
+    catches (they are already non-equivalent at that point)."""
+    gens = [WorkloadGen(k=k, z=z, f=f, seed=gen_seed, window=3)
+            for _ in range(2)]
+    topos = [builder(vec) for vec in (True, False)]
+    for i in range(intervals):
+        keys = None
+        for gen, topo in zip(gens, topos):
+            if i:
+                gen.interval(topo.specs[0].stage.controller.assignment)
+            drawn = gen.draw_tuples(tuples).astype(np.int64)
+            if keys is None:
+                keys = drawn
+            else:
+                assert np.array_equal(drawn, keys), "streams diverged"
+            topo.process_interval(drawn, (drawn * 7 + i) % 11)
+    return topos
+
+
+def assert_topologies_identical(vec, ref):
+    assert len(vec.reports) == len(ref.reports)
+    for rv, rr in zip(vec.reports, ref.reports):
+        assert rv.tuples_in == rr.tuples_in
+        assert rv.stage_tuples == rr.stage_tuples
+        assert rv.critical_path == rr.critical_path
+        assert rv.throughput == rr.throughput
+        assert rv.migrated_bytes == rr.migrated_bytes
+        assert rv.buffered == rr.buffered
+        for sv, sr in zip(rv.stage_reports, rr.stage_reports):
+            for field in REPORT_FIELDS:
+                assert getattr(sv, field) == getattr(sr, field), \
+                    (rv.interval, field)
+            assert np.array_equal(sv.task_loads, sr.task_loads)
+    assert np.array_equal(vec.last_emit_keys, ref.last_emit_keys)
+    assert np.array_equal(vec.last_emit_values, ref.last_emit_values)
+
+
+def test_three_stage_pipeline_parity_with_multi_stage_rebalances():
+    vec, ref = drive_topology_pair(build_three_stage)
+    assert_topologies_identical(vec, ref)
+    # the scenario is only meaningful if the protocol actually ran at
+    # multiple stages: migrations at >= 2 stages, live pause/replay
+    # downstream, and at least one interval where rebalances fired at more
+    # than one stage simultaneously
+    by_stage = vec.rebalances_by_stage()
+    triggered_stages = [name for name, ivs in by_stage.items() if ivs]
+    assert len(triggered_stages) >= 2, by_stage
+    sets = [set(ivs) for ivs in by_stage.values() if ivs]
+    common = set.intersection(*sets) if len(sets) >= 2 else set()
+    assert common, f"no interval with rebalances at >=2 stages: {by_stage}"
+    migrating_stages = {
+        spec.name
+        for spec in vec.specs
+        if any(r.migrated_bytes > 0 for r in spec.stage.reports)}
+    assert len(migrating_stages) >= 2, by_stage
+    assert any(r.buffered > 0 for r in vec.reports)
+
+
+def test_two_stage_selfjoin_pipeline_parity():
+    """Join-flavored chain: self-join keyed by ticker -> per-sector volume."""
+
+    def build(vec):
+        s1 = keyed_stage(WindowedSelfJoin(probe_cost=1.0 / 64), n_tasks=6,
+                         theta_max=0.05, table_max=300, window=3, seed=0,
+                         vectorized=vec)
+        s2 = keyed_stage(WordCount(), n_tasks=4, theta_max=0.05,
+                         table_max=200, window=3, seed=1, vectorized=vec)
+        return Topology([
+            StageSpec("join", s1),
+            StageSpec("volume", s2, rekey=lambda k, v: k % 16),
+        ])
+
+    vec, ref = drive_topology_pair(build, intervals=5, tuples=2000, k=300,
+                                   z=1.0, f=1.0)
+    assert_topologies_identical(vec, ref)
+    assert any(r.migrated_bytes > 0 for r in vec.reports)
+
+
+def test_filter_drops_tuples_downstream():
+    vec, _ = drive_topology_pair(build_three_stage, intervals=3)
+    for rep in vec.reports:
+        n_src, n_counted, n_topk = rep.stage_tuples
+        assert n_src == rep.tuples_in
+        assert 0 < n_counted < n_src          # the filter dropped some
+        assert n_topk == n_counted            # aggregations are 1-to-1
+    # critical path really is the sum of the per-stage critical paths
+    rep = vec.reports[-1]
+    assert rep.critical_path == sum(r.makespan + r.migration_stall
+                                    for r in rep.stage_reports)
+    assert rep.throughput == rep.tuples_in / rep.critical_path
+
+
+def test_topology_final_emits_are_running_maxima():
+    """The top-k front's emit stream is empty (MergeCounts is terminal) but
+    its stores hold the per-bucket running max of upstream counts."""
+    vec, _ = drive_topology_pair(build_three_stage, intervals=3)
+    assert vec.last_emit_keys.size == 0
+    topk = vec["topk"]
+    buckets = {}
+    for store in topk.stores:
+        for k, ks in store.keys.items():
+            buckets[k] = max(buckets.get(k, 0),
+                             max(sl.payload["count"]
+                                 for sl in ks.slices.values()))
+    # with 3 intervals driven under a 3-interval window nothing has evicted,
+    # so each word's running totals are monotone and its LAST emit equals its
+    # last-wins output — the per-bucket running max is exactly the max final
+    # output over the bucket's words
+    count_stage = vec["count"]
+    expected = {}
+    for k, v in count_stage.outputs.items():
+        b = k % 32
+        expected[b] = max(expected.get(b, 0), int(v))
+    assert buckets == expected
+    assert set(buckets) <= set(range(32))
+
+
+def test_rekey_sees_values():
+    """Edges re-key on (key, value) pairs — value-dependent routing works."""
+
+    def build(vec):
+        s1 = keyed_stage(WordCount(), n_tasks=4, theta_max=0.1, table_max=200,
+                         window=2, seed=0, vectorized=vec)
+        s2 = keyed_stage(MergeCounts(), n_tasks=3, theta_max=0.1,
+                         table_max=100, window=2, seed=1, vectorized=vec)
+        return Topology([
+            StageSpec("count", s1),
+            # route by count magnitude: hot words (large totals) share keys
+            StageSpec("bands", s2, rekey=lambda k, v: np.minimum(v, 7)),
+        ])
+
+    vec, ref = drive_topology_pair(build, intervals=4, tuples=1500, k=200,
+                                   z=1.0, f=0.5)
+    assert_topologies_identical(vec, ref)
+    bands = set()
+    for store in vec["bands"].stores:
+        bands.update(store.keys)
+    assert bands <= set(range(8))
+
+
+def test_filter_list_api_emitted_sum_parity():
+    """The list API hands Python ints as payloads; Filter's batched path
+    must count them toward emitted_sum exactly like the per-tuple loop does
+    (regression: the ndarray conversion used to zero it out)."""
+    stages = [keyed_stage(Filter(lambda k, v: (k + v) % 4 != 0), n_tasks=3,
+                          theta_max=0.1, table_max=100, window=2, seed=0,
+                          vectorized=vec) for vec in (True, False)]
+    rng = np.random.default_rng(0)
+    for i in range(2):
+        keys = rng.integers(0, 50, size=400)
+        for stage in stages:
+            stage.process_interval([(int(k), int(k) % 7) for k in keys])
+    vec, ref = stages
+    assert vec.emitted_sum == ref.emitted_sum
+    assert vec.emitted_sum > 0
+    assert vec.outputs == ref.outputs
+
+
+def test_triggered_intervals_survive_empty_interval():
+    """A stats-free interval (no tuples, no held state) skips the controller;
+    its recorded intervals must still align with the stage clock (regression:
+    the private counter used to lag by one forever)."""
+    stage = keyed_stage(WordCount(), n_tasks=4, theta_max=0.0, table_max=200,
+                        window=1, seed=0)
+    stage.process_interval_arrays(np.zeros(0, dtype=np.int64))   # interval 1
+    rng = np.random.default_rng(1)
+    keys = rng.zipf(1.5, size=2000) % 100                        # interval 2
+    stage.process_interval_arrays(keys.astype(np.int64))
+    assert stage.controller.triggered_intervals() == [2]
+
+
+def test_topology_validation():
+    s = keyed_stage(WordCount(), n_tasks=2, theta_max=0.1)
+    with pytest.raises(ValueError):
+        Topology([])
+    with pytest.raises(ValueError):
+        Topology([StageSpec("a", s), StageSpec("a", s)])
+    topo = Topology([StageSpec("a", s)])
+    with pytest.raises(KeyError):
+        topo["missing"]
+
+
+def test_pallas_substrate_topology_matches_numpy():
+    """2-stage pipeline with both stages on the pallas substrate: integer
+    routing decisions (table size, migration, buffering) must coincide with
+    the numpy pipeline; float32 stats make loads agree to ~1e-5."""
+    pytest.importorskip("jax")
+    from repro.core.balancer.hashing import Hash32
+
+    def build(substrate):
+        s1 = keyed_stage(WordCount(), n_tasks=5, theta_max=0.05,
+                         table_max=300, window=2, seed=3, hash_cls=Hash32,
+                         substrate=substrate)
+        s2 = keyed_stage(MergeCounts(), n_tasks=3, theta_max=0.05,
+                         table_max=150, window=2, seed=4, hash_cls=Hash32,
+                         substrate=substrate)
+        return Topology([
+            StageSpec("count", s1),
+            StageSpec("topk", s2, rekey=lambda k, v: k % 16),
+        ])
+
+    gens = [WorkloadGen(k=400, z=1.1, f=0.8, seed=7, window=2)
+            for _ in range(2)]
+    topos = [build(s) for s in ("numpy", "pallas")]
+    for i in range(4):
+        keys = None
+        for gen, topo in zip(gens, topos):
+            if i:
+                gen.interval(topo.specs[0].stage.controller.assignment)
+            drawn = gen.draw_tuples(1500).astype(np.int64)
+            if keys is None:
+                keys = drawn
+            else:
+                assert np.array_equal(drawn, keys), "plans diverged"
+            topo.process_interval(drawn, None)
+    np_topo, pl_topo = topos
+    for rn, rp in zip(np_topo.reports, pl_topo.reports):
+        assert rn.buffered == rp.buffered
+        assert rn.migrated_bytes == rp.migrated_bytes
+        assert rn.stage_tuples == rp.stage_tuples
+        for sn, sp in zip(rn.stage_reports, rp.stage_reports):
+            assert sn.table_size == sp.table_size
+            np.testing.assert_allclose(sp.task_loads, sn.task_loads,
+                                       rtol=1e-5)
+    assert any(r.table_size > 0
+               for r in np_topo.specs[0].stage.reports)
