@@ -1,33 +1,44 @@
-"""Perf-regression gate: fresh planner_scaling JSON vs the committed baseline.
+"""Perf-regression gate: fresh benchmark JSON vs committed baselines.
 
-Compares per-point ``plan_time_s`` for every (profile, algo, k) series point
-present in BOTH files and fails when any ratio fresh/baseline exceeds the
-threshold (default 2x — generous enough to absorb runner-to-runner noise on
-best-of-N timings, tight enough to catch a real algorithmic regression).
-Points whose baseline time is below ``--min-baseline-s`` (default 15 ms)
-are printed but not gated: small plans are scheduler-noise-dominated
-(observed up to ~1.6x swing on the same machine) and would flake the ratio
-even with no regression.
+Gates two smoke benchmarks with one rule — per-point wall time must not
+exceed ``--max-ratio`` (default 2x) of the committed baseline; points whose
+baseline time is below ``--min-baseline-s`` (default 15 ms) are printed but
+not gated (small runs are scheduler-noise-dominated, observed up to ~1.6x
+swing on the same machine):
 
-The committed baseline (``benchmarks/planner_scaling.json``) is generated
-with a K sweep that is a superset of the CI smoke sweep
+* **planner** (``--fresh`` / ``--baseline``): ``planner_scaling`` series,
+  keyed by ``(profile, algo, k)`` on ``plan_time_s``;
+* **engine fast path** (``--fastpath-fresh`` / ``--fastpath-baseline``):
+  ``engine_fastpath`` flat ``series``, keyed by point name on ``seconds``
+  (the per-tuple/vectorized dispatch A/B and the object/columnar
+  store-backend A/B).
+
+The committed planner baseline (``benchmarks/planner_scaling.json``) is
+generated with a K sweep that is a superset of the CI smoke sweep
 (``--ks 5000,10000,30000,100000``), so the per-PR ``--smoke`` run always
-finds its points. Zero common points is a configuration error and exits 2
-so the gate can never silently pass.
+finds its points. The committed fast-path baseline is
+``benchmarks/engine_fastpath.json`` (quick mode, the same mode CI runs).
+Zero common points in any enabled section is a configuration error and
+exits 2 so the gate can never silently pass.
 
-The comparison is absolute wall time, so the baseline must come from a
-machine in the same speed class as the CI runners. If the gate starts
-failing uniformly across algorithms after a runner-class change (every
-ratio shifted by a similar factor, no code change), refresh the baseline:
-rerun ``planner_scaling.py --ks 5000,10000,30000,100000`` on a runner (the
-nightly workflow's environment) and commit the JSON. A genuine regression
-shows up as one or a few algorithms moving while the rest hold.
+The comparison is absolute wall time, so baselines must come from a machine
+in the same speed class as the CI runners. If the gate starts failing
+uniformly after a runner-class change (every ratio shifted by a similar
+factor, no code change), refresh the affected baseline: rerun
+``planner_scaling.py --ks 5000,10000,30000,100000`` and/or
+``engine_fastpath.py`` on a runner (the nightly workflow's environment) and
+commit the JSON. A genuine regression shows up as one or a few points
+moving while the rest hold.
 
 Usage (what CI runs):
 
     python benchmarks/planner_scaling.py --smoke --out fresh.json
+    python benchmarks/engine_fastpath.py --out fresh_fastpath.json
     python benchmarks/check_perf_gate.py --fresh fresh.json \
-        --baseline benchmarks/planner_scaling.json --max-ratio 2.0
+        --baseline benchmarks/planner_scaling.json \
+        --fastpath-fresh fresh_fastpath.json \
+        --fastpath-baseline benchmarks/engine_fastpath.json \
+        --max-ratio 2.0
 """
 
 from __future__ import annotations
@@ -37,55 +48,95 @@ import json
 import sys
 
 
-def _index(series):
+def _index_planner(series):
     return {(s["profile"], s["algo"], s["k"]): s["plan_time_s"]
             for s in series}
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--fresh", required=True,
-                    help="JSON from the just-run planner_scaling sweep")
-    ap.add_argument("--baseline", default="benchmarks/planner_scaling.json",
-                    help="committed baseline JSON")
-    ap.add_argument("--max-ratio", type=float, default=2.0,
-                    help="fail when fresh/baseline plan time exceeds this")
-    ap.add_argument("--min-baseline-s", type=float, default=0.015,
-                    help="points with baseline plan time below this are "
-                         "reported but not gated (noise-dominated: "
-                         "low-tens-of-ms best-of-trials points can swing "
-                         "~1.6x on the SAME machine)")
-    args = ap.parse_args()
+def _index_fastpath(series):
+    return {(s["name"],): s["seconds"] for s in series}
 
-    with open(args.fresh) as f:
-        fresh = _index(json.load(f)["series"])
-    with open(args.baseline) as f:
-        base = _index(json.load(f)["series"])
 
+def _gate_section(label, fresh, base, max_ratio, min_baseline_s):
+    """Print one section's comparison table; returns (violations, gated).
+
+    ``fresh``/``base`` map point-key tuples to wall seconds. Exits 2 from
+    here when the section has no common points (misconfiguration must never
+    read as a pass).
+    """
     common = sorted(set(fresh) & set(base))
     if not common:
-        print("perf gate misconfigured: no (profile, algo, k) point is "
-              "shared between fresh and baseline JSON", file=sys.stderr)
+        print(f"perf gate misconfigured [{label}]: no point is shared "
+              "between fresh and baseline JSON", file=sys.stderr)
+        sys.exit(2)
+
+    width = max(len(" ".join(str(p) for p in key)) for key in common)
+    print(f"[{label}]")
+    print(f"{'point':>{width}} {'base_s':>10} {'fresh_s':>10} {'ratio':>7}")
+    violations = []
+    gated = 0
+    for key in common:
+        b, fr = base[key], fresh[key]
+        ratio = fr / b if b > 0 else float("inf")
+        exempt = b < min_baseline_s
+        flag = ("  (ungated: baseline < "
+                f"{min_baseline_s * 1e3:.0f} ms)" if exempt
+                else "  <-- REGRESSION" if ratio > max_ratio else "")
+        name = " ".join(str(p) for p in key)
+        print(f"{name:>{width}} {b:>10.4f} {fr:>10.4f} {ratio:>7.2f}{flag}")
+        if exempt:
+            continue
+        gated += 1
+        if ratio > max_ratio:
+            violations.append(((label,) + key, ratio))
+    return violations, gated
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fresh", default=None,
+                    help="JSON from the just-run planner_scaling sweep")
+    ap.add_argument("--baseline", default="benchmarks/planner_scaling.json",
+                    help="committed planner baseline JSON")
+    ap.add_argument("--fastpath-fresh", default=None,
+                    help="JSON from the just-run engine_fastpath A/B")
+    ap.add_argument("--fastpath-baseline",
+                    default="benchmarks/engine_fastpath.json",
+                    help="committed engine_fastpath baseline JSON")
+    ap.add_argument("--max-ratio", type=float, default=2.0,
+                    help="fail when fresh/baseline wall time exceeds this")
+    ap.add_argument("--min-baseline-s", type=float, default=0.015,
+                    help="points with baseline time below this are reported "
+                         "but not gated (noise-dominated: low-tens-of-ms "
+                         "best-of-trials points can swing ~1.6x on the SAME "
+                         "machine)")
+    args = ap.parse_args()
+
+    if args.fresh is None and args.fastpath_fresh is None:
+        print("perf gate misconfigured: pass --fresh and/or "
+              "--fastpath-fresh", file=sys.stderr)
         sys.exit(2)
 
     violations = []
     gated = 0
-    print(f"{'profile':>8} {'algo':>18} {'k':>8} {'base_s':>10} "
-          f"{'fresh_s':>10} {'ratio':>7}")
-    for key in common:
-        b, fr = base[key], fresh[key]
-        ratio = fr / b if b > 0 else float("inf")
-        exempt = b < args.min_baseline_s
-        flag = ("  (ungated: baseline < "
-                f"{args.min_baseline_s * 1e3:.0f} ms)" if exempt
-                else "  <-- REGRESSION" if ratio > args.max_ratio else "")
-        print(f"{key[0]:>8} {key[1]:>18} {key[2]:>8} {b:>10.4f} "
-              f"{fr:>10.4f} {ratio:>7.2f}{flag}")
-        if exempt:
-            continue
-        gated += 1
-        if ratio > args.max_ratio:
-            violations.append((key, ratio))
+    if args.fresh is not None:
+        with open(args.fresh) as f:
+            fresh = _index_planner(json.load(f)["series"])
+        with open(args.baseline) as f:
+            base = _index_planner(json.load(f)["series"])
+        v, g = _gate_section("planner", fresh, base, args.max_ratio,
+                             args.min_baseline_s)
+        violations += v
+        gated += g
+    if args.fastpath_fresh is not None:
+        with open(args.fastpath_fresh) as f:
+            fresh = _index_fastpath(json.load(f)["series"])
+        with open(args.fastpath_baseline) as f:
+            base = _index_fastpath(json.load(f)["series"])
+        v, g = _gate_section("engine_fastpath", fresh, base, args.max_ratio,
+                             args.min_baseline_s)
+        violations += v
+        gated += g
 
     if not gated:
         print("perf gate misconfigured: every common point fell under "
@@ -94,10 +145,12 @@ def main() -> None:
     if violations:
         print(f"\nperf gate FAILED: {len(violations)}/{gated} gated points "
               f"regressed beyond {args.max_ratio}x", file=sys.stderr)
+        for key, ratio in violations:
+            print(f"  {' '.join(str(p) for p in key)}: {ratio:.2f}x",
+                  file=sys.stderr)
         sys.exit(1)
     print(f"\nperf gate OK: {gated} gated points within "
-          f"{args.max_ratio}x of baseline "
-          f"({len(common) - gated} noise-exempt)")
+          f"{args.max_ratio}x of baseline")
 
 
 if __name__ == "__main__":

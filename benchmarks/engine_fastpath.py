@@ -1,16 +1,29 @@
-"""A/B microbenchmark: vectorized engine fast path vs per-tuple baseline.
+"""A/B microbenchmarks for the engine hot path.
 
-Drives the fig13 workload (k=3000, z=0.9 WordCount stream under the Mixed
-controller) through ``KeyedStage`` twice — ``vectorized=False`` (the
-per-tuple reference loop) and ``vectorized=True`` (argsort dispatch +
-batched operators + segment-sum stats) — timing only ``process_interval``
-(the engine hot path; workload generation is identical and excluded).
+Two A/Bs, both timing only ``process_interval`` (workload generation is
+identical and excluded), with parity asserted per point:
 
-Run directly for JSON output (both tuples/sec numbers + speedup):
+1. **Dispatch A/B** — the fig13 workload (k=3000, z=0.9 WordCount stream
+   under the Mixed controller) through ``KeyedStage`` twice:
+   ``vectorized=False`` (the per-tuple reference loop) vs
+   ``vectorized=True`` (argsort dispatch + batched operators + segment-sum
+   stats).
+2. **Store-backend A/B** — a large-key-domain windowed workload (K=1e5,
+   window=4, rebalances active: the regime the paper's protocol pays per
+   interval) through the vectorized engine twice: ``state_backend="object"``
+   (dict-of-KeyState store, per-key Python at every interval boundary and
+   migration) vs ``state_backend="columnar"`` (flat arrays + whole-interval
+   single dispatch). Reports must be bit-identical; the JSON records both
+   throughputs and the speedup.
+
+Run directly for JSON output:
 
     PYTHONPATH=src:. python benchmarks/engine_fastpath.py [--full] [--out f]
 
 or via the harness: ``python benchmarks/run.py --only engine_fastpath``.
+The emitted JSON also carries a flat ``series`` list (name -> seconds) that
+``benchmarks/check_perf_gate.py --fastpath-fresh/--fastpath-baseline`` gates
+against the committed ``benchmarks/engine_fastpath.json`` baseline.
 """
 
 from __future__ import annotations
@@ -28,6 +41,33 @@ from repro.core import (Assignment, BalanceConfig, ModHash,
 from repro.streams import KeyedStage, WordCount, WorkloadGen
 
 FIG13_WORKLOAD = dict(k=3_000, z=0.9, f=1.0)
+# the store-backend A/B regime: large key domain, window > 1, frequent
+# rebalance — per-interval store costs dominate exactly here
+STORE_AB_WORKLOAD = dict(k=100_000, z=0.9, f=1.0)
+STORE_AB_WINDOW = 4
+
+REPORT_FIELDS = ("interval", "tuples", "makespan", "migration_stall",
+                 "throughput", "skewness", "theta", "migrated_bytes",
+                 "table_size", "buffered")
+
+
+def _make_batches(gen: WorkloadGen, controller: RebalanceController,
+                  tuples_per_interval: int, intervals: int) -> List[np.ndarray]:
+    batches: List[np.ndarray] = []
+    for i in range(intervals):
+        if i:
+            gen.interval(controller.assignment)
+        batches.append(gen.draw_tuples(tuples_per_interval).astype(np.int64))
+    return batches
+
+
+def _drive(stage: KeyedStage, batches: List[np.ndarray]) -> float:
+    elapsed = 0.0
+    for keys in batches:
+        t0 = time.perf_counter()
+        stage.process_interval_arrays(keys, None)
+        elapsed += time.perf_counter() - t0
+    return elapsed
 
 
 def _measure(vectorized: bool, tuples_per_interval: int, intervals: int,
@@ -39,16 +79,8 @@ def _measure(vectorized: bool, tuples_per_interval: int, intervals: int,
         algorithm="mixed")
     stage = KeyedStage(WordCount(), controller, window=window,
                        vectorized=vectorized)
-    batches: List[np.ndarray] = []
-    for i in range(intervals):
-        if i:
-            gen.interval(controller.assignment)
-        batches.append(gen.draw_tuples(tuples_per_interval).astype(np.int64))
-    elapsed = 0.0
-    for keys in batches:
-        t0 = time.perf_counter()
-        stage.process_interval_arrays(keys, None)
-        elapsed += time.perf_counter() - t0
+    batches = _make_batches(gen, controller, tuples_per_interval, intervals)
+    elapsed = _drive(stage, batches)
     total = intervals * tuples_per_interval
     return {
         "vectorized": vectorized,
@@ -58,6 +90,64 @@ def _measure(vectorized: bool, tuples_per_interval: int, intervals: int,
         "mean_throughput_model": float(np.mean(
             [r.throughput for r in stage.reports[1:]])),
         "rebalances": sum(1 for ev in controller.history if ev.triggered),
+    }
+
+
+def _store_stage(backend: str, window: int, n_tasks: int,
+                 seed: int) -> KeyedStage:
+    controller = RebalanceController(
+        Assignment(ModHash(n_tasks, seed=seed)),
+        BalanceConfig(theta_max=0.08, table_max=3_000, window=window),
+        algorithm="mixed")
+    return KeyedStage(WordCount(), controller, window=window,
+                      vectorized=True, state_backend=backend)
+
+
+def _assert_store_parity(col: KeyedStage, obj: KeyedStage) -> None:
+    assert len(col.reports) == len(obj.reports)
+    for rc, ro in zip(col.reports, obj.reports):
+        for field in REPORT_FIELDS:
+            assert getattr(rc, field) == getattr(ro, field), (
+                f"store-backend parity violated on {field} at interval "
+                f"{rc.interval}: columnar={getattr(rc, field)!r} "
+                f"object={getattr(ro, field)!r}")
+        assert np.array_equal(rc.task_loads, ro.task_loads), \
+            f"task_loads diverged at interval {rc.interval}"
+    assert col.total_state_keys() == obj.total_state_keys()
+
+
+def _measure_store_backends(tuples_per_interval: int, intervals: int,
+                            n_tasks: int = 10, seed: int = 0) -> dict:
+    window = STORE_AB_WINDOW
+    gen = WorkloadGen(seed=seed, window=window, **STORE_AB_WORKLOAD)
+    # one shared stream: both backends must see identical traffic for the
+    # per-point parity assertion to be meaningful
+    probe = RebalanceController(
+        Assignment(ModHash(n_tasks, seed=seed)),
+        BalanceConfig(theta_max=0.08, table_max=3_000, window=window),
+        algorithm="mixed")
+    batches = _make_batches(gen, probe, tuples_per_interval, intervals)
+    stages = {b: _store_stage(b, window, n_tasks, seed)
+              for b in ("object", "columnar")}
+    seconds = {b: _drive(stage, batches) for b, stage in stages.items()}
+    _assert_store_parity(stages["columnar"], stages["object"])
+    total = intervals * tuples_per_interval
+    rebalances = sum(1 for ev in stages["columnar"].controller.history
+                     if ev.triggered)
+    assert rebalances > 0, "store A/B must exercise live rebalances"
+    return {
+        "workload": {**STORE_AB_WORKLOAD, "window": window,
+                     "tuples_per_interval": tuples_per_interval,
+                     "intervals": intervals, "n_tasks": n_tasks,
+                     "operator": "wordcount"},
+        "tuples": total,
+        "object_seconds": seconds["object"],
+        "columnar_seconds": seconds["columnar"],
+        "object_tuples_per_sec": total / seconds["object"],
+        "columnar_tuples_per_sec": total / seconds["columnar"],
+        "speedup": seconds["object"] / seconds["columnar"],
+        "rebalances": rebalances,
+        "parity": True,                     # _assert_store_parity raised if not
     }
 
 
@@ -73,6 +163,21 @@ def run(quick: bool = True) -> dict:
                    key=lambda r: r["seconds"])
     fast = min((_measure(True, n, intervals) for _ in range(repeats)),
                key=lambda r: r["seconds"])
+    # store A/B: K=1e5 needs interval size >= domain to keep most keys hot.
+    # Parity is asserted inside every repeat; timing takes the best repeat
+    # PER BACKEND independently (same rule as the dispatch A/B above) so a
+    # noise spike on one side cannot fail the gate or skew the speedup.
+    store_n = 150_000
+    store_intervals = 3 if quick else 6
+    store_runs = [_measure_store_backends(store_n, store_intervals)
+                  for _ in range(repeats)]
+    store = dict(min(store_runs, key=lambda r: r["columnar_seconds"]))
+    store["object_seconds"] = min(r["object_seconds"] for r in store_runs)
+    store["columnar_seconds"] = min(r["columnar_seconds"] for r in store_runs)
+    store["object_tuples_per_sec"] = store["tuples"] / store["object_seconds"]
+    store["columnar_tuples_per_sec"] = (store["tuples"]
+                                        / store["columnar_seconds"])
+    store["speedup"] = store["object_seconds"] / store["columnar_seconds"]
     return {
         "workload": {"figure": "fig13", **FIG13_WORKLOAD,
                      "tuples_per_interval": n, "intervals": intervals,
@@ -82,6 +187,14 @@ def run(quick: bool = True) -> dict:
         "speedup": fast["tuples_per_sec"] / baseline["tuples_per_sec"],
         "baseline": baseline,
         "vectorized": fast,
+        "store_backend": store,
+        # flat points for check_perf_gate.py (name -> seconds)
+        "series": [
+            {"name": "per_tuple_baseline", "seconds": baseline["seconds"]},
+            {"name": "vectorized", "seconds": fast["seconds"]},
+            {"name": "store_object", "seconds": store["object_seconds"]},
+            {"name": "store_columnar", "seconds": store["columnar_seconds"]},
+        ],
     }
 
 
@@ -89,20 +202,27 @@ def rows(quick: bool = True):
     r = run(quick)
     us_base = 1e6 / r["baseline_tuples_per_sec"]
     us_fast = 1e6 / r["vectorized_tuples_per_sec"]
+    st = r["store_backend"]
     return [
         ("engine_fastpath/per_tuple_baseline", us_base,
          f"tuples_per_sec={r['baseline_tuples_per_sec']:.0f}"),
         ("engine_fastpath/vectorized", us_fast,
          f"tuples_per_sec={r['vectorized_tuples_per_sec']:.0f};"
          f"speedup={r['speedup']:.1f}x"),
+        ("engine_fastpath/store_object", 1e6 / st["object_tuples_per_sec"],
+         f"tuples_per_sec={st['object_tuples_per_sec']:.0f};"
+         f"k={st['workload']['k']};window={st['workload']['window']}"),
+        ("engine_fastpath/store_columnar", 1e6 / st["columnar_tuples_per_sec"],
+         f"tuples_per_sec={st['columnar_tuples_per_sec']:.0f};"
+         f"speedup={st['speedup']:.1f}x;parity=ok"),
     ]
 
 
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--full", action="store_true",
-                    help="more intervals (8 vs 4) and repeats (3 vs 2); the "
-                         "40k-tuple interval size is the same in both modes")
+                    help="more intervals and repeats; interval sizes are the "
+                         "same in both modes")
     ap.add_argument("--out", default=None,
                     help="write JSON here instead of stdout")
     args = ap.parse_args()
@@ -111,7 +231,9 @@ def main() -> None:
     if args.out:
         with open(args.out, "w") as f:
             f.write(blob + "\n")
-        print(f"wrote {args.out}: speedup {result['speedup']:.1f}x",
+        print(f"wrote {args.out}: dispatch speedup {result['speedup']:.1f}x, "
+              f"store-backend speedup "
+              f"{result['store_backend']['speedup']:.1f}x",
               file=sys.stderr)
     else:
         print(blob)

@@ -69,6 +69,11 @@ class RebalanceController:
         self.executor = executor
         self.history: List[ControllerEvent] = []
         self._interval = 0
+        #: monotone counter bumped every time ``self.assignment`` is replaced
+        #: (rebalance or rescale). Data planes key device-side routing-table
+        #: caches on it so unchanged assignments skip the rebuild/re-upload
+        #: (see KeyedStage._dest_batch).
+        self.assignment_version = 0
 
     # -- paper step 2: trigger decision --------------------------------------
     def should_trigger(self, stats: KeyStats) -> bool:
@@ -120,6 +125,7 @@ class RebalanceController:
         if self.executor is not None and len(result.moved_keys):
             self.executor(result.moved_keys, self.assignment, result.assignment)
         self.assignment = result.assignment
+        self.assignment_version += 1
         ev = ControllerEvent(self._interval, True, th, result)
         self.history.append(ev)
         return ev
@@ -144,6 +150,7 @@ class RebalanceController:
             if len(rehashed):
                 self.executor(rehashed, old_assignment, interim)
         self.assignment = interim
+        self.assignment_version += 1
         return self.on_interval(stats, force=True)
 
     # -- fleet health: straggler demotion (beyond-paper, production posture) --

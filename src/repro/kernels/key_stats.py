@@ -17,6 +17,7 @@ bytes; BN=BK=512 -> ~1.1 MB, comfortably inside the ~16 MB/core VMEM.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -51,12 +52,15 @@ def _key_stats_kernel(keys_ref, costs_ref, freq_ref, cost_ref, *, block_k: int):
                                     "interpret"))
 def key_stats(keys: jax.Array, costs: jax.Array, num_keys: int,
               block_n: int = 512, block_k: int = 512,
-              interpret: bool = True):
+              interpret: Optional[bool] = None):
     """Per-key frequency and cost over a tuple/token stream.
 
     keys: (N,) int32 in [0, num_keys), -1 = padding; costs: (N,) float.
-    Returns (freq, cost) each (num_keys,) float32.
+    Returns (freq, cost) each (num_keys,) float32. ``interpret=None``
+    auto-selects: compiled on real TPU backends, interpret mode elsewhere.
     """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     n = keys.shape[0]
     n_pad = pl.cdiv(n, block_n) * block_n - n
     k_pad = pl.cdiv(num_keys, block_k) * block_k - num_keys

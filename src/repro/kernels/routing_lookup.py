@@ -15,6 +15,7 @@ max instead to stay ~2.5 MB.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -52,8 +53,16 @@ def _routing_kernel(keys_ref, tkeys_ref, tdests_ref, out_ref, *, n_dest: int,
                    static_argnames=("n_dest", "seed", "block_n", "interpret"))
 def routing_lookup(keys: jax.Array, table_keys: jax.Array,
                    table_dests: jax.Array, n_dest: int, seed: int = 0,
-                   block_n: int = 1024, interpret: bool = True) -> jax.Array:
-    """Vectorized F(k) for a token/tuple block. -1 table slots = empty."""
+                   block_n: int = 1024,
+                   interpret: Optional[bool] = None) -> jax.Array:
+    """Vectorized F(k) for a token/tuple block. -1 table slots = empty.
+
+    ``interpret=None`` (default) auto-selects: compiled Mosaic on real TPU
+    backends, interpret mode elsewhere (CPU/GPU have no lowering for this
+    kernel). Both values are static, so the choice is baked per trace.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     n = keys.shape[0]
     a = table_keys.shape[0]
     n_pad = pl.cdiv(n, block_n) * block_n - n

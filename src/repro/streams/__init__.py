@@ -1,17 +1,20 @@
 """Faithful stream-processing substrate: engine, operators, state, generator,
 and multi-stage topologies."""
 
-from .engine import SUBSTRATES, IntervalReport, KeyedStage
+from .engine import STATE_BACKENDS, SUBSTRATES, IntervalReport, KeyedStage
 from .generator import WorkloadGen, zipf_frequencies
-from .operators import (BatchResult, Filter, MergeCounts, Operator,
-                        PartialWordCount, WindowedSelfJoin, WordCount)
-from .state import KeyState, TaskStateStore
+from .operators import (BatchResult, Filter, IntervalBatchResult, MergeCounts,
+                        Operator, PartialWordCount, WindowedSelfJoin,
+                        WordCount)
+from .state import (ColumnarSpec, ColumnarStateStore, KeyState,
+                    TaskStateStore)
 from .topology import StageSpec, Topology, TopologyReport, keyed_stage
 
 __all__ = [
-    "SUBSTRATES", "IntervalReport", "KeyedStage", "WorkloadGen",
-    "zipf_frequencies", "BatchResult", "Filter", "MergeCounts", "Operator",
-    "PartialWordCount", "WindowedSelfJoin", "WordCount", "KeyState",
-    "TaskStateStore", "StageSpec", "Topology", "TopologyReport",
+    "STATE_BACKENDS", "SUBSTRATES", "IntervalReport", "KeyedStage",
+    "WorkloadGen", "zipf_frequencies", "BatchResult", "Filter",
+    "IntervalBatchResult", "MergeCounts", "Operator", "PartialWordCount",
+    "WindowedSelfJoin", "WordCount", "ColumnarSpec", "ColumnarStateStore",
+    "KeyState", "TaskStateStore", "StageSpec", "Topology", "TopologyReport",
     "keyed_stage",
 ]

@@ -60,9 +60,10 @@ from repro.core.balancer import Assignment, KeyStats, metrics
 from repro.core.controller import RebalanceController
 
 from .operators import Operator
-from .state import TaskStateStore
+from .state import ColumnarStateStore, TaskStateStore
 
 SUBSTRATES = ("numpy", "pallas")
+STATE_BACKENDS = ("auto", "columnar", "object")
 
 
 @dataclasses.dataclass
@@ -89,6 +90,17 @@ class KeyedStage:
         selects the per-tuple reference loop — same results, ~10x slower;
         kept for parity testing and as executable documentation.
       substrate: ``"numpy"`` or ``"pallas"`` — see the module docstring.
+      state_backend: ``"auto"`` (default) picks the columnar store when the
+        operator declares a ``columnar_spec`` and the stage is vectorized —
+        state then lives in flat per-task arrays and each macro-batch is ONE
+        whole-interval operator dispatch (``Operator.process_interval_batch``)
+        instead of a per-task Python loop. ``"object"`` forces the dict-of-
+        KeyState store (the compatibility/parity backend, and the only one
+        custom per-tuple operators can use); ``"columnar"`` forces the array
+        store and raises if the operator cannot support it.
+      kernel_interpret: Pallas ``interpret=`` mode for the routing/stats
+        kernels. ``None`` (default) auto-selects: compiled on real TPU
+        backends, interpret elsewhere (CPU has no Mosaic lowering).
       stats_dense_max: in the pallas substrate, the stats histogram kernel
         needs a dense key domain; domains larger than this fall back to the
         numpy segment-sum for step 1 (routing stays on the kernel).
@@ -98,15 +110,36 @@ class KeyedStage:
                  window: int = 1, migration_bandwidth: float = 1e6,
                  micro_batches: int = 8, migration_batches: int = 2,
                  vectorized: bool = True, substrate: str = "numpy",
+                 state_backend: str = "auto",
+                 kernel_interpret: Optional[bool] = None,
                  stats_dense_max: int = 1 << 20):
         if substrate not in SUBSTRATES:
             raise ValueError(f"unknown substrate {substrate!r}; "
                              f"choose from {SUBSTRATES}")
+        if state_backend not in STATE_BACKENDS:
+            raise ValueError(f"unknown state backend {state_backend!r}; "
+                             f"choose from {STATE_BACKENDS}")
         self.operator = operator
         self.controller = controller
         self.window = window
         self.n_tasks = controller.assignment.n_dest
-        self.stores = [TaskStateStore(window) for _ in range(self.n_tasks)]
+        spec = getattr(operator, "columnar_spec", None)
+        if state_backend == "columnar":
+            if spec is None:
+                raise ValueError(
+                    f"state_backend='columnar' requires an operator with a "
+                    f"columnar_spec; {type(operator).__name__} has none "
+                    "(custom per-tuple operators need the object store)")
+            if not vectorized:
+                raise ValueError("state_backend='columnar' requires "
+                                 "vectorized=True (the per-tuple reference "
+                                 "path uses scalar state access)")
+            self._columnar = True
+        else:
+            self._columnar = (state_backend == "auto" and vectorized
+                              and spec is not None)
+        self.state_backend = "columnar" if self._columnar else "object"
+        self.stores = [self._new_store() for _ in range(self.n_tasks)]
         self.migration_bandwidth = migration_bandwidth
         self.micro_batches = micro_batches
         self.migration_batches = migration_batches
@@ -123,12 +156,19 @@ class KeyedStage:
         self._migrated_bytes_pending = 0.0
         self._plan_time_pending = 0.0
         self._table_capacity = 0      # pallas routing-table pad, high-water mark
+        self._route_cache = None      # (cache key, device tk, device td)
+        self._kernel_interpret = kernel_interpret
         if substrate == "pallas":
-            self._init_pallas()
+            self._init_pallas(kernel_interpret)
         # wire the migration executor (paper steps 5-6)
         self.controller.executor = self._migrate
 
-    def _init_pallas(self) -> None:
+    def _new_store(self):
+        if self._columnar:
+            return ColumnarStateStore(self.window, self.operator.columnar_spec)
+        return TaskStateStore(self.window)
+
+    def _init_pallas(self, kernel_interpret: Optional[bool]) -> None:
         from repro.core.balancer.hashing import Hash32
         router = self.controller.assignment.hash_router
         if not isinstance(router, Hash32):
@@ -136,37 +176,45 @@ class KeyedStage:
                 "substrate='pallas' requires a Hash32 router (device-"
                 f"canonical fmix32); got {type(router).__name__}. ModHash's "
                 "splitmix64 has no 32-bit kernel equivalent.")
-        import jax.numpy as jnp                       # lazy: numpy path stays jax-free
+        import jax                                    # lazy: numpy path stays jax-free
+        import jax.numpy as jnp
         from repro.kernels.key_stats import key_stats
         from repro.kernels.routing_lookup import routing_lookup
         self._jnp = jnp
         self._kernel_route = routing_lookup
         self._kernel_stats = key_stats
         self._hash_seed = router.seed
+        if kernel_interpret is None:
+            # compiled kernels on real TPU backends; interpret elsewhere
+            kernel_interpret = jax.default_backend() != "tpu"
+        self._kernel_interpret = bool(kernel_interpret)
 
-    # -- state migration: move KeyState between stores -------------------------
+    # -- state migration: move keyed state between stores ----------------------
     def _migrate(self, moved_keys: np.ndarray, old: Assignment,
                  new: Assignment) -> None:
-        """Executor for protocol steps 5-6, array-at-a-time: one dest() call
-        per assignment, group-by-source extraction (`extract_many`), then
-        group-by-destination installs."""
+        """Executor for protocol steps 5-6, array-at-a-time and backend-
+        agnostic: one dest() call per assignment, group-by-source extraction
+        into packs, mask-split per destination, group installs. On the
+        columnar backend a pack is a row slice of flat arrays; on the object
+        backend it is the keys plus their KeyState objects — either way no
+        per-key dict is built here."""
         keys = np.asarray(moved_keys, dtype=np.int64)
         src = old.dest(keys)
         dst = new.dest(keys)
         moving = src != dst
-        mkeys, msrc, mdst = keys[moving], src[moving], dst[moving]
+        mkeys, msrc = keys[moving], src[moving]
         total = 0.0
-        extracted: Dict[int, Any] = {}
+        installs = []
         for s in np.unique(msrc):
-            sel = mkeys[msrc == s].tolist()
-            total += self.stores[int(s)].migrated_bytes(sel)
-            extracted.update(self.stores[int(s)].extract_many(
-                np.asarray(sel, dtype=np.int64)))
-        for d in np.unique(mdst):
-            batch = {int(k): extracted[int(k)] for k in mkeys[mdst == d]
-                     if int(k) in extracted}
-            if batch:
-                self.stores[int(d)].install_many(batch)
+            pack = self.stores[int(s)].extract_batch(mkeys[msrc == s])
+            if not pack.keys.size:
+                continue
+            total += pack.nbytes
+            pdst = new.dest(pack.keys)
+            for d in np.unique(pdst):
+                installs.append((int(d), pack.take(pdst == d)))
+        for d, pack in installs:
+            self.stores[d].install_batch(pack)
         self._migrated_bytes_pending += total
         # the reference loop materializes the membership set lazily; the
         # vectorized path only ever consults the array (np.isin)
@@ -288,8 +336,38 @@ class KeyedStage:
                        abs_idx: np.ndarray, values: Optional[Sequence[Any]],
                        task_cost, acc_keys, acc_cost, acc_freq,
                        emit_acc=None) -> None:
-        """Partition one micro-batch per task via argsort + segment boundaries
-        and hand each segment to the operator's batched kernel."""
+        """Hand one macro-batch to the operator.
+
+        Columnar backend: ONE whole-interval dispatch — the operator lexsorts
+        on (dest, key) once, computes every segment's closed forms in a
+        single pass, and scatters per-task costs with one ``np.bincount``.
+        Object backend: partition per task via argsort + segment boundaries
+        and call the operator's batched kernel per segment (compatibility
+        path for custom operators; also the parity oracle)."""
+        if self._columnar:
+            op = self.operator
+            if not op.columnar_needs_values or values is None:
+                vals_b = None
+            elif isinstance(values, np.ndarray):
+                vals_b = values[abs_idx]
+            else:
+                vals_b = [values[i] for i in abs_idx.tolist()]
+            res, emits = op.process_interval_batch(
+                self.stores, iv, bkeys, bdests, self.n_tasks, vals_b,
+                collect_emits=emit_acc is not None)
+            task_cost += res.task_cost
+            acc_keys.append(res.uniq_keys)
+            acc_cost.append(res.key_cost)
+            acc_freq.append(res.key_freq)
+            for ok, ov in res.outputs:
+                self.outputs[ok] = ov
+            self.emitted_sum += res.emit_sum
+            if emit_acc is not None:
+                ecounts, ekeys, evals = emits
+                if ekeys.size:
+                    emit_acc.append((np.repeat(abs_idx, ecounts),
+                                     ekeys, evals))
+            return
         order = np.argsort(bdests, kind="stable")
         sorted_dests = bdests[order]
         bounds = np.searchsorted(sorted_dests, np.arange(self.n_tasks + 1))
@@ -347,12 +425,27 @@ class KeyedStage:
             needed = max(128, 1 << max(0, assignment.table_size - 1).bit_length())
             if needed > self._table_capacity:
                 self._table_capacity = needed
-            tk, td = assignment.table_arrays(self._table_capacity)
+            # Device-side table cache: rebuilding table_arrays and re-running
+            # jnp.asarray uploads every interval is pure waste when the
+            # assignment didn't change. The controller bumps
+            # assignment_version on every rebalance/rescale, so (version,
+            # table_size, capacity) only moves when the table can differ.
+            # (In-place table mutation without a size change bypasses the
+            # controller and is not supported by this cache.)
+            cache_key = (self.controller.assignment_version,
+                         assignment.table_size, self._table_capacity)
+            if self._route_cache is None or self._route_cache[0] != cache_key:
+                tk, td = assignment.table_arrays(self._table_capacity)
+                self._route_cache = (
+                    cache_key,
+                    self._jnp.asarray(tk.astype(np.int32)),
+                    self._jnp.asarray(td.astype(np.int32)))
+            _, tk_dev, td_dev = self._route_cache
             out = self._kernel_route(
                 self._jnp.asarray(keys.astype(np.int32)),
-                self._jnp.asarray(tk.astype(np.int32)),
-                self._jnp.asarray(td.astype(np.int32)),
-                assignment.n_dest, seed=self._hash_seed)
+                tk_dev, td_dev,
+                assignment.n_dest, seed=self._hash_seed,
+                interpret=self._kernel_interpret)
             return np.asarray(out).astype(np.int64)
         return self.controller.assignment.dest(keys)
 
@@ -399,8 +492,10 @@ class KeyedStage:
         jnp = self._jnp
         num = int(max(seen.max(initial=0), held_keys.max(initial=0))) + 1
         seen_dev = jnp.asarray(seen.astype(np.int32))
-        _, cost_d = self._kernel_stats(seen_dev, jnp.asarray(cost_parts), num)
-        _, freq_d = self._kernel_stats(seen_dev, jnp.asarray(freq_parts), num)
+        _, cost_d = self._kernel_stats(seen_dev, jnp.asarray(cost_parts), num,
+                                       interpret=self._kernel_interpret)
+        _, freq_d = self._kernel_stats(seen_dev, jnp.asarray(freq_parts), num,
+                                       interpret=self._kernel_interpret)
         cost = np.asarray(cost_d, dtype=np.float64)
         freq = np.asarray(freq_d, dtype=np.float64)
         mem = metrics.segment_sum(held_sizes, held_keys, num)
@@ -552,24 +647,23 @@ class KeyedStage:
         if self.last_stats is None:
             raise RuntimeError("scale_to requires at least one processed interval")
         while len(self.stores) < n_tasks:
-            self.stores.append(TaskStateStore(self.window))
+            self.stores.append(self._new_store())
         self.controller.rescale(n_tasks, self.last_stats)
         # reconciliation sweep: the rescale executor only covers keys present
-        # in the last interval's stats; stale-state keys re-hash too.
+        # in the last interval's stats; stale-state keys re-hash too. Pack
+        # extraction + mask splits keep this array-native on both backends.
         for s_idx, store in enumerate(self.stores):
             held, _ = store.sizes_arrays()
             if not held.size:
                 continue
             dst = self.controller.assignment.dest(held)
-            moving = dst != s_idx
-            movers, mdst = held[moving], dst[moving]
+            movers = held[dst != s_idx]
             if movers.size:
-                self._migrated_bytes_pending += store.migrated_bytes(
-                    movers.tolist())
-                extracted = store.extract_many(movers)
-                for d in np.unique(mdst):
-                    self.stores[int(d)].install_many(
-                        {int(k): extracted[int(k)] for k in movers[mdst == d]})
+                pack = store.extract_batch(movers)
+                self._migrated_bytes_pending += pack.nbytes
+                pdst = self.controller.assignment.dest(pack.keys)
+                for d in np.unique(pdst):
+                    self.stores[int(d)].install_batch(pack.take(pdst == d))
         self.stores = self.stores[:n_tasks]
         self.n_tasks = n_tasks
 

@@ -37,6 +37,19 @@ more (custom operators via the per-tuple fallback). The built-ins derive
 the per-occurrence emit values in closed form — the j-th tuple of a key in
 a segment emits an arithmetic-progression term — so chaining stages keeps
 the no-per-tuple-Python property end to end.
+
+Columnar whole-interval dispatch
+--------------------------------
+Operators whose windowed state is a single numeric slot per (key, interval)
+declare a :class:`~repro.streams.state.ColumnarSpec` via ``columnar_spec``;
+the engine then gives them a :class:`~repro.streams.state.ColumnarStateStore`
+fleet and calls :meth:`Operator.process_interval_batch` ONCE per macro-batch
+instead of once per task: one ``np.lexsort`` on ``(dest, key)`` yields every
+task's segment, every unique-key group and every occurrence index in a
+single pass; per-task costs are scattered with one ``np.bincount``; the
+per-destination store updates are one vectorized ``update_slots`` slice
+each. Custom operators (no ``columnar_spec``) keep the object store and the
+per-task ``process_batch`` loop — the compatibility/parity oracle.
 """
 
 from __future__ import annotations
@@ -46,7 +59,7 @@ from typing import Any, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .state import TaskStateStore
+from .state import ColumnarSpec, TaskStateStore
 
 
 @dataclasses.dataclass
@@ -74,6 +87,104 @@ class BatchResult:
     task_cost: float
     outputs: List[Tuple[int, Any]]
     emit_sum: float
+
+
+@dataclasses.dataclass
+class IntervalBatchResult:
+    """What one :meth:`Operator.process_interval_batch` call produced.
+
+    The whole-interval analogue of :class:`BatchResult`: covers every task's
+    segment at once, so ``task_cost`` is the full per-task cost vector (one
+    ``np.bincount`` scatter) instead of a single task's scalar.
+    ``uniq_keys``/``key_cost``/``key_freq`` are ordered by ``(dest, key)`` —
+    the exact concatenation order the per-task path would have produced.
+    """
+
+    uniq_keys: np.ndarray          # (U,) int64 groups, (dest, key)-sorted
+    key_cost: np.ndarray           # (U,) float64
+    key_freq: np.ndarray           # (U,) float64
+    task_cost: np.ndarray          # (n_tasks,) float64
+    outputs: List[Tuple[int, Any]]
+    emit_sum: float
+
+
+def _interval_groups(keys: np.ndarray, dests: np.ndarray):
+    """One lexsort over a whole macro-batch -> every segment's closed-form
+    inputs: ``(order, starts, gk, gd, counts, gidx, occ)``.
+
+    ``order`` sorts positions by ``(dest, key)`` (stable); groups are the
+    maximal runs sharing both. ``gk``/``gd``/``counts`` describe each group,
+    ``gidx`` maps each sorted position to its group, and ``occ`` is the
+    occurrence index within the group (stream order — the stable sort keeps
+    same-key tuples in input order, which is what the per-occurrence emit
+    progressions index by).
+    """
+    order = np.lexsort((keys, dests))
+    sk = keys[order]
+    sd = dests[order]
+    n = sk.size
+    newgrp = np.empty(n, dtype=bool)
+    newgrp[0] = True
+    np.logical_or(sk[1:] != sk[:-1], sd[1:] != sd[:-1], out=newgrp[1:])
+    starts = np.nonzero(newgrp)[0]
+    counts = np.diff(np.append(starts, n))
+    gidx = np.cumsum(newgrp) - 1
+    occ = np.arange(n, dtype=np.int64) - starts[gidx]
+    return order, starts, sk[starts], sd[starts], counts, gidx, occ
+
+
+def _update_by_dest(stores, interval: int, gk: np.ndarray, gd: np.ndarray,
+                    add: np.ndarray, n_tasks: int
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+    """Apply per-(dest, key) group updates store by store.
+
+    ``gd`` is sorted, so each destination's groups are one contiguous slice —
+    at most ``n_tasks`` vectorized ``update_slots`` calls, no per-key work.
+    Returns the concatenated ``(win_before, slot_before)`` arrays aligned
+    with the groups.
+    """
+    win0 = np.empty(gk.size, dtype=np.float64)
+    slot0 = np.empty(gk.size, dtype=np.float64)
+    bounds = np.searchsorted(gd, np.arange(n_tasks + 1))
+    for d in range(n_tasks):
+        s0, s1 = int(bounds[d]), int(bounds[d + 1])
+        if s0 == s1:
+            continue
+        win0[s0:s1], slot0[s0:s1] = stores[d].update_slots(
+            interval, gk[s0:s1], add[s0:s1])
+    return win0, slot0
+
+
+def _counting_interval_batch(stores, interval: int, keys: np.ndarray,
+                             dests: np.ndarray, n_tasks: int,
+                             collect_emits: bool, window_total: bool):
+    """Whole-interval dispatch shared by the counting family.
+
+    WordCount and PartialWordCount differ only in which ``c0`` their emit
+    progression starts from: the windowed total (``window_total=True``) or
+    the current interval slice (False). Everything else — one lexsort, one
+    ``update_slots`` slice per destination, one ``np.bincount`` scatter,
+    arithmetic-progression emits — is identical.
+    """
+    order, _, gk, gd, counts, gidx, occ = _interval_groups(keys, dests)
+    fcounts = counts.astype(np.float64)
+    win0, slot0 = _update_by_dest(stores, interval, gk, gd, fcounts, n_tasks)
+    c0s = (win0 if window_total else slot0).astype(np.int64)
+    # emits per key are the running totals c0+1 .. c0+m: sum and last value
+    # are exact integer arithmetic
+    outputs = list(zip(gk.tolist(), (c0s + counts).tolist()))
+    emit_sum = float(np.dot(counts, c0s) + np.dot(counts, counts + 1) / 2.0)
+    res = IntervalBatchResult(
+        gk, fcounts.copy(), fcounts,
+        np.bincount(gd, weights=fcounts, minlength=n_tasks),
+        outputs, emit_sum)
+    if not collect_emits:
+        return res, None
+    # the j-th occurrence of a key emits its running total c0 + j
+    evals = np.empty(keys.size, dtype=np.int64)
+    evals[order] = c0s[gidx] + occ + 1
+    return res, (np.ones(keys.size, dtype=np.int64),
+                 keys.astype(np.int64, copy=False), evals)
 
 
 def _occurrence_index(inv: np.ndarray, counts: np.ndarray) -> np.ndarray:
@@ -125,6 +236,14 @@ class Operator:
     #: set False when ``process_batch`` never reads tuple payloads — lets the
     #: vectorized engine skip gathering per-segment value lists entirely.
     needs_values = True
+    #: :class:`~repro.streams.state.ColumnarSpec` when the operator's state is
+    #: one numeric slot per (key, interval) — opts into the columnar store
+    #: backend and whole-interval dispatch. None keeps the object store.
+    columnar_spec: Optional[ColumnarSpec] = None
+    #: whether the columnar whole-interval path reads tuple payloads (may
+    #: differ from ``needs_values``: the columnar self-join derives everything
+    #: from counts and never stores the raw tuples).
+    columnar_needs_values = True
 
     def process(self, store: TaskStateStore, interval: int, key: int,
                 value: Any) -> Tuple[List[Tuple[int, Any]], float]:
@@ -194,13 +313,33 @@ class Operator:
         return (res, counts, np.asarray(ekeys, dtype=np.int64),
                 np.asarray(evals))
 
+    def process_interval_batch(self, stores, interval: int, keys: np.ndarray,
+                               dests: np.ndarray, n_tasks: int,
+                               values: Optional[Sequence[Any]],
+                               collect_emits: bool):
+        """Whole-interval single dispatch over the columnar store fleet.
+
+        Covers EVERY task's segment of one macro-batch in one call — the
+        engine only invokes it when ``columnar_spec`` is set (``stores`` are
+        then :class:`~repro.streams.state.ColumnarStateStore` instances).
+        Returns ``(IntervalBatchResult, emits)`` where ``emits`` is the
+        ``(emit_counts, emit_keys, emit_values)`` triple in input order when
+        ``collect_emits`` is true, else None.
+        """
+        raise NotImplementedError(
+            f"{type(self).__name__} sets columnar_spec but does not "
+            "implement process_interval_batch")
+
 
 class WordCount(Operator):
     name = "wordcount"
     needs_values = False
+    columnar_needs_values = False
 
     def __init__(self, bytes_per_entry: float = 16.0):
         self.bytes_per_entry = bytes_per_entry
+        self.columnar_spec = ColumnarSpec(mode="add",
+                                          slot_bytes=bytes_per_entry)
 
     def process(self, store, interval, key, value):
         ks = store.state(key)
@@ -249,13 +388,25 @@ class WordCount(Operator):
         return (res, np.ones(len(keys), dtype=np.int64),
                 keys.astype(np.int64, copy=False), evals)
 
+    def process_interval_batch(self, stores, interval, keys, dests, n_tasks,
+                               values, collect_emits):
+        return _counting_interval_batch(stores, interval, keys, dests,
+                                        n_tasks, collect_emits,
+                                        window_total=True)
+
 
 class WindowedSelfJoin(Operator):
     name = "selfjoin"
+    #: columnar mode derives matches/costs from per-slot tuple COUNTS and
+    #: does not retain the raw tuple payloads (nothing downstream reads them)
+    columnar_needs_values = False
 
     def __init__(self, bytes_per_tuple: float = 32.0, probe_cost: float = 0.01):
         self.bytes_per_tuple = bytes_per_tuple
         self.probe_cost = probe_cost
+        self.columnar_spec = ColumnarSpec(mode="add", slot_bytes=0.0,
+                                          bytes_per_unit=bytes_per_tuple,
+                                          payload="tuples")
 
     def process(self, store, interval, key, value):
         ks = store.state(key)
@@ -310,6 +461,26 @@ class WindowedSelfJoin(Operator):
         return (res, np.ones(len(keys), dtype=np.int64),
                 keys.astype(np.int64, copy=False), evals)
 
+    def process_interval_batch(self, stores, interval, keys, dests, n_tasks,
+                               values, collect_emits):
+        order, _, gk, gd, counts, gidx, occ = _interval_groups(keys, dests)
+        fcounts = counts.astype(np.float64)
+        win0, _ = _update_by_dest(stores, interval, gk, gd, fcounts, n_tasks)
+        c0s = win0.astype(np.int64)     # window tuple counts before the batch
+        probes = counts * c0s + counts * (counts - 1) / 2.0
+        key_cost = fcounts * 1.0 + self.probe_cost * probes
+        outputs = list(zip(gk.tolist(), (c0s + counts - 1).tolist()))
+        res = IntervalBatchResult(
+            gk, key_cost, fcounts,
+            np.bincount(gd, weights=key_cost, minlength=n_tasks),
+            outputs, float(probes.sum()))
+        if not collect_emits:
+            return res, None
+        evals = np.empty(keys.size, dtype=np.int64)
+        evals[order] = c0s[gidx] + occ
+        return res, (np.ones(keys.size, dtype=np.int64),
+                     keys.astype(np.int64, copy=False), evals)
+
 
 class PartialWordCount(Operator):
     """Split-key (PKG-style) word count: emits partial counts that must be
@@ -317,9 +488,12 @@ class PartialWordCount(Operator):
 
     name = "partial_wordcount"
     needs_values = False
+    columnar_needs_values = False
 
     def __init__(self, bytes_per_entry: float = 16.0):
         self.bytes_per_entry = bytes_per_entry
+        self.columnar_spec = ColumnarSpec(mode="add",
+                                          slot_bytes=bytes_per_entry)
 
     def process(self, store, interval, key, value):
         ks = store.state(key)
@@ -361,6 +535,14 @@ class PartialWordCount(Operator):
         return (res, np.ones(len(keys), dtype=np.int64),
                 keys.astype(np.int64, copy=False), evals)
 
+    def process_interval_batch(self, stores, interval, keys, dests, n_tasks,
+                               values, collect_emits):
+        # partial counts restart per interval slice: c0 is the CURRENT slice
+        # count, not the window total
+        return _counting_interval_batch(stores, interval, keys, dests,
+                                        n_tasks, collect_emits,
+                                        window_total=False)
+
 
 class MergeCounts(Operator):
     """PKG's downstream merger: combines partial counts per key."""
@@ -369,6 +551,8 @@ class MergeCounts(Operator):
 
     def __init__(self):
         self.bytes_per_entry = 16.0
+        self.columnar_spec = ColumnarSpec(mode="max",
+                                          slot_bytes=self.bytes_per_entry)
 
     def process(self, store, interval, key, value):
         ks = store.state(key)
@@ -399,6 +583,24 @@ class MergeCounts(Operator):
         return (res, np.zeros(len(keys), dtype=np.int64),
                 np.zeros(0, dtype=np.int64), np.zeros(0, dtype=np.float64))
 
+    def process_interval_batch(self, stores, interval, keys, dests, n_tasks,
+                               values, collect_emits):
+        order, starts, gk, gd, counts, _, _ = _interval_groups(keys, dests)
+        # per-group running max; int cast first to match the scalar int(v)
+        vals64 = np.asarray(values).astype(np.int64)
+        gmax = np.maximum.reduceat(vals64[order], starts)
+        _update_by_dest(stores, interval, gk, gd, gmax.astype(np.float64),
+                        n_tasks)
+        fcounts = counts.astype(np.float64)
+        res = IntervalBatchResult(
+            gk, 0.5 * fcounts, fcounts,
+            np.bincount(gd, weights=0.5 * fcounts, minlength=n_tasks),
+            [], 0.0)
+        if not collect_emits:
+            return res, None
+        return res, (np.zeros(keys.size, dtype=np.int64),
+                     np.zeros(0, dtype=np.int64), np.zeros(0, dtype=np.float64))
+
 
 class Filter(Operator):
     """Stateless selection: forwards tuples whose ``(key, value)`` passes
@@ -411,6 +613,9 @@ class Filter(Operator):
     """
 
     name = "filter"
+    #: stateless — the columnar store is never touched, but opting in routes
+    #: the stage through the whole-interval single dispatch
+    columnar_spec = ColumnarSpec()
 
     def __init__(self, predicate, cost_per_tuple: float = 0.25):
         self.predicate = predicate
@@ -425,33 +630,52 @@ class Filter(Operator):
         res, _, _, _ = self.process_batch_emits(store, interval, keys, values)
         return res
 
-    def process_batch_emits(self, store, interval, keys, values):
+    def _select(self, keys, values):
+        """Shared selection core: keep mask, kept tuples, last-wins outputs
+        over kept tuples only (a dropped tuple never reaches the outputs
+        dict), and the emitted-sum under the per-tuple isinstance rule on
+        the ORIGINAL payloads — a Python list of ints counts, but its int64
+        ndarray conversion would not, so sum from ``values`` when the
+        caller passed a non-ndarray sequence."""
         vals = (values if isinstance(values, np.ndarray)
                 else np.asarray(values if values is not None
                                 else [None] * len(keys)))
         keep = np.asarray(self.predicate(keys, vals), dtype=bool)
         kept_k = keys[keep]
         kept_v = vals[keep]
-        uniq, counts = np.unique(keys, return_counts=True)
-        freq = counts.astype(np.float64)
-        # last-wins outputs over *kept* tuples only, matching the per-tuple
-        # loop (a dropped tuple never reaches the outputs dict)
         outputs = []
         if kept_k.size:
             rev_uniq, rev_first = np.unique(kept_k[::-1], return_index=True)
             outputs = list(zip(rev_uniq.tolist(),
                                kept_v[::-1][rev_first].tolist()))
-        # emitted_sum must follow the per-tuple isinstance rule on the
-        # ORIGINAL payloads: a Python list of ints counts, but its int64
-        # ndarray conversion would not — so sum from `values` when the
-        # caller passed a non-ndarray sequence
         if isinstance(values, np.ndarray) or values is None:
             emit_sum = _numeric_emit_sum(kept_v)
         else:
             emit_sum = _numeric_emit_sum(
                 [values[i] for i in np.nonzero(keep)[0]])
+        return keep, kept_k, kept_v, outputs, emit_sum
+
+    def process_batch_emits(self, store, interval, keys, values):
+        keep, kept_k, kept_v, outputs, emit_sum = self._select(keys, values)
+        uniq, counts = np.unique(keys, return_counts=True)
+        freq = counts.astype(np.float64)
         res = BatchResult(uniq, self.cost_per_tuple * freq, freq,
                           self.cost_per_tuple * float(len(keys)), outputs,
                           emit_sum)
         return (res, keep.astype(np.int64),
                 kept_k.astype(np.int64, copy=False), kept_v)
+
+    def process_interval_batch(self, stores, interval, keys, dests, n_tasks,
+                               values, collect_emits):
+        keep, kept_k, kept_v, outputs, emit_sum = self._select(keys, values)
+        _, _, gk, gd, counts, _, _ = _interval_groups(keys, dests)
+        fcounts = counts.astype(np.float64)
+        res = IntervalBatchResult(
+            gk, self.cost_per_tuple * fcounts, fcounts,
+            np.bincount(gd, weights=self.cost_per_tuple * fcounts,
+                        minlength=n_tasks),
+            outputs, emit_sum)
+        if not collect_emits:
+            return res, None
+        return res, (keep.astype(np.int64),
+                     kept_k.astype(np.int64, copy=False), kept_v)

@@ -5,17 +5,35 @@ older than ``window`` intervals after the interval closes (the paper's model:
 "the task instance erases the state from T_{i-w} after finishing T_i").
 ``S(k, w)`` — the migration-cost weight — is the summed size over the window.
 
+Two backends implement the same store contract:
+
+* :class:`TaskStateStore` — the original object store: one :class:`KeyState`
+  per key holding an ``OrderedDict`` of per-interval :class:`WindowSlice`
+  objects. Fully general (payloads are arbitrary Python objects); this is
+  the reference-path store and the compatibility backend for custom
+  operators.
+* :class:`ColumnarStateStore` — flat arrays for numeric windowed operators:
+  a sorted key column plus a ring of ``window + 1`` per-interval value/size
+  columns. ``update_slots`` / ``end_interval_collect`` / migration are pure
+  numpy — no per-key Python anywhere — so interval boundaries and
+  migrations cost O(columns) vectorized work instead of O(keys) dict
+  traffic. Eviction is a column clear; migration is row slicing.
+
 Batched API
 -----------
 The vectorized engine (see :mod:`repro.streams.engine`) never touches state
 one key at a time on the hot path.  Instead it uses the array-at-a-time
-methods added here:
+methods shared by both backends:
 
-* :meth:`TaskStateStore.update_many` — fetch-or-create the current interval's
-  :class:`WindowSlice` for a whole batch of unique keys in one call (one dict
-  probe per *unique* key instead of one per tuple);
-* :meth:`TaskStateStore.extract_many` / :meth:`TaskStateStore.install_many` —
-  migration primitives over key arrays (paper protocol steps 5-6);
+* :meth:`TaskStateStore.update_many` (object) /
+  :meth:`ColumnarStateStore.update_slots` (columnar) — fetch-or-create the
+  current interval's slot for a whole batch of unique keys in one call;
+* :meth:`TaskStateStore.extract_batch` / :meth:`TaskStateStore.install_batch`
+  — migration primitives over key arrays (paper protocol steps 5-6); both
+  backends exchange opaque *packs* (:class:`ObjectPack` /
+  :class:`ColumnarPack`) that support destination splitting via
+  :meth:`~ColumnarPack.take`, so the engine's migration executor never
+  builds per-key dicts;
 * :meth:`TaskStateStore.sizes_arrays` — ``(keys, S(k,w))`` as numpy arrays
   for vectorized stats collection (paper step 1).
 
@@ -27,7 +45,8 @@ from __future__ import annotations
 
 import dataclasses
 from collections import OrderedDict
-from typing import Any, Callable, Dict, Iterator, List, Tuple
+from collections.abc import Mapping
+from typing import Any, Callable, Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
 
@@ -184,9 +203,10 @@ class TaskStateStore:
         """Array-at-a-time :meth:`extract` (migration step 5).
 
         Accepts any integer array; keys not present on this task are ignored,
-        matching the scalar method's semantics.
+        matching the scalar method's semantics. ``ndarray.tolist()`` converts
+        to native ints in one C call — no per-element ``int(k)`` round-trip.
         """
-        return self.extract([int(k) for k in np.asarray(keys).ravel()])
+        return self.extract(np.asarray(keys, dtype=np.int64).ravel().tolist())
 
     def install(self, states: Dict[int, KeyState]) -> None:
         for k, ks in states.items():
@@ -198,6 +218,332 @@ class TaskStateStore:
         """Alias of :meth:`install` under the batched-API naming (step 6)."""
         self.install(states)
 
-    def migrated_bytes(self, keys: List[int]) -> float:
-        return float(sum(self.keys[k].total_size() for k in keys
-                         if k in self.keys))
+    # -- pack-based migration (backend-agnostic engine contract) ---------------
+    def extract_batch(self, keys: np.ndarray) -> "ObjectPack":
+        """Remove ``keys`` (missing ones ignored) and return them as a pack.
+
+        The pack supports :meth:`ObjectPack.take` so the engine can split one
+        extraction across destinations without rebuilding per-key dicts.
+        """
+        arr = np.asarray(keys, dtype=np.int64).ravel()
+        found = np.zeros(arr.size, dtype=bool)
+        states: List[KeyState] = []
+        store = self.keys
+        for i, k in enumerate(arr.tolist()):
+            ks = store.pop(k, None)
+            if ks is not None:
+                found[i] = True
+                states.append(ks)
+        return ObjectPack(arr[found], states)
+
+    def install_batch(self, pack: "ObjectPack") -> None:
+        store = self.keys
+        for k, ks in zip(pack.keys.tolist(), pack.states):
+            if k in store:
+                raise RuntimeError(f"key {k} already present on target task")
+            store[k] = ks
+
+
+@dataclasses.dataclass
+class ObjectPack:
+    """In-flight migration payload for the object backend: keys + their
+    :class:`KeyState` objects, aligned."""
+
+    keys: np.ndarray
+    states: List[KeyState]
+
+    @property
+    def nbytes(self) -> float:
+        return float(sum(ks.total_size() for ks in self.states))
+
+    def take(self, mask: np.ndarray) -> "ObjectPack":
+        mask = np.asarray(mask, dtype=bool)
+        return ObjectPack(self.keys[mask],
+                          [s for s, m in zip(self.states, mask.tolist()) if m])
+
+
+# ---------------------------------------------------------------------------
+# Columnar backend
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ColumnarSpec:
+    """Slot semantics for :class:`ColumnarStateStore`.
+
+    The columnar backend models one *numeric* slot per (key, interval):
+    ``mode`` describes how a batch of ``add`` units folds into the slot
+    value, ``slot_bytes`` is the size charged when a slot is first created
+    (WordCount's fixed per-entry bytes) and ``bytes_per_unit`` the size
+    growth per added unit (the self-join's per-stored-tuple bytes).
+    ``payload`` selects how the compatibility ``keys`` view materializes
+    slot payloads for store introspection: ``"count"`` -> ``{"count": n}``
+    (the word-count family), ``"tuples"`` -> a length-``n`` list (the
+    self-join; the raw tuple payloads are not retained columnarly).
+    """
+
+    mode: str = "add"            # "add" | "max"
+    slot_bytes: float = 0.0      # size charged when a slot is created
+    bytes_per_unit: float = 0.0  # extra size per added unit
+    payload: str = "count"       # compat-view materialization
+
+
+class _ColumnarKeysView(Mapping):
+    """Read-only dict-like view over a columnar store's keys.
+
+    Materializes :class:`KeyState` snapshots on demand so store
+    introspection (tests, notebooks) works identically across backends.
+    Mutating a snapshot does NOT write back to the columns.
+    """
+
+    def __init__(self, store: "ColumnarStateStore"):
+        self._store = store
+
+    def __len__(self) -> int:
+        return int(self._store._keys.size)
+
+    def __iter__(self):
+        return iter(self._store._keys.tolist())
+
+    def __contains__(self, key) -> bool:
+        return self._store._row_of(key) is not None
+
+    def __getitem__(self, key) -> KeyState:
+        row = self._store._row_of(key)
+        if row is None:
+            raise KeyError(key)
+        return self._store._key_state_snapshot(row)
+
+
+class ColumnarStateStore:
+    """Array-native windowed state for numeric operators (one task instance).
+
+    Layout: ``_keys`` (K,) int64 sorted ascending; ``_vals`` / ``_sizes``
+    (K, window+1) float64; ``_present`` (K, window+1) bool; ``_col_iv``
+    (window+1,) maps each column to the interval it currently holds (-1 =
+    empty). ``window + 1`` columns because during interval ``T_i`` the live
+    window still includes ``T_{i-w}`` (it is erased only *after* ``T_i``
+    finishes — paper Sec. II-A), so ``w + 1`` intervals are readable at
+    once. Column assignment is the ring position ``interval % (window+1)``,
+    which is identical across stores of one stage, so migration moves rows
+    column-for-column.
+
+    Invariant: non-present slots hold exact 0.0 in ``_vals`` and ``_sizes``,
+    so window totals and S(k, w) are plain row sums.
+    """
+
+    def __init__(self, window: int, spec: ColumnarSpec):
+        if spec.mode not in ("add", "max"):
+            raise ValueError(f"unknown columnar mode {spec.mode!r}")
+        self.window = window
+        self.spec = spec
+        self._ncols = window + 1
+        self._keys = np.zeros(0, dtype=np.int64)
+        self._vals = np.zeros((0, self._ncols), dtype=np.float64)
+        self._sizes = np.zeros((0, self._ncols), dtype=np.float64)
+        self._present = np.zeros((0, self._ncols), dtype=bool)
+        self._col_iv = np.full(self._ncols, -1, dtype=np.int64)
+
+    # -- introspection (dict-store-compatible surface) -------------------------
+    @property
+    def keys(self) -> _ColumnarKeysView:
+        return _ColumnarKeysView(self)
+
+    def _row_of(self, key) -> Optional[int]:
+        keys = self._keys
+        if not keys.size:
+            return None
+        pos = int(np.searchsorted(keys, key))
+        if pos < keys.size and int(keys[pos]) == key:
+            return pos
+        return None
+
+    def _key_state_snapshot(self, row: int) -> KeyState:
+        ks = KeyState(self.window)
+        live = np.nonzero(self._present[row])[0]
+        for j in live[np.argsort(self._col_iv[live])]:
+            iv = int(self._col_iv[j])
+            n = int(self._vals[row, j])
+            if self.spec.payload == "tuples":
+                payload: Any = [None] * n
+            else:
+                payload = {"count": n}
+            ks.slices[iv] = WindowSlice(iv, payload, float(self._sizes[row, j]))
+        return ks
+
+    def state(self, key: int) -> KeyState:
+        raise NotImplementedError(
+            "ColumnarStateStore has no mutable per-key objects; scalar "
+            "operator access needs the object backend "
+            "(KeyedStage(state_backend='object'))")
+
+    # -- batched hot-path access ----------------------------------------------
+    def update_slots(self, interval: int, keys: np.ndarray, add: np.ndarray
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+        """Fold a batch of per-key units into interval ``interval``'s column.
+
+        ``keys`` must be sorted unique int64; ``add`` aligned float64 (tuple
+        counts for the "add" ops, per-key maxima for "max"). Returns
+        ``(win_before, slot_before)``: the windowed totals (all live slots,
+        current included) and the current-slot values, both *before* this
+        update — exactly the ``c0`` quantities the operators' closed forms
+        need. Missing keys/slots are created; slot creation charges
+        ``spec.slot_bytes`` and each added unit ``spec.bytes_per_unit``.
+        """
+        keys = np.asarray(keys, dtype=np.int64)
+        add = np.asarray(add, dtype=np.float64)
+        c = int(interval) % self._ncols
+        if self._col_iv[c] != interval:
+            # the ring slot last held interval - (window+1), which eviction
+            # cleared at the previous boundary; the wipe below only does work
+            # for direct-API callers that skip end_interval
+            if self._col_iv[c] >= 0:
+                self._vals[:, c] = 0.0
+                self._sizes[:, c] = 0.0
+                self._present[:, c] = False
+            self._col_iv[c] = interval
+        nkeys = self._keys
+        if nkeys.size:
+            pos = np.searchsorted(nkeys, keys)
+            inb = pos < nkeys.size
+            found = np.zeros(keys.size, dtype=bool)
+            found[inb] = nkeys[pos[inb]] == keys[inb]
+            if found.all():              # steady state: no new keys, no rescan
+                rows = pos
+            else:
+                self._insert_rows(keys[~found])
+                rows = np.searchsorted(self._keys, keys)
+        else:
+            self._insert_rows(keys)
+            rows = np.arange(keys.size)
+        win_before = self._vals[rows].sum(axis=1)
+        slot_before = self._vals[rows, c].copy()
+        fresh = ~self._present[rows, c]
+        self._present[rows, c] = True
+        grow = np.where(fresh, self.spec.slot_bytes, 0.0)
+        if self.spec.mode == "add":
+            self._vals[rows, c] = slot_before + add
+            if self.spec.bytes_per_unit:
+                grow = grow + self.spec.bytes_per_unit * add
+        else:
+            self._vals[rows, c] = np.maximum(slot_before, add)
+        self._sizes[rows, c] += grow
+        return win_before, slot_before
+
+    def _insert_rows(self, new_keys: np.ndarray) -> None:
+        """Merge-insert sorted unique ``new_keys`` as zeroed rows."""
+        old = self._keys
+        idx = np.searchsorted(old, new_keys)
+        newpos = idx + np.arange(new_keys.size)
+        total = old.size + new_keys.size
+        keep = np.ones(total, dtype=bool)
+        keep[newpos] = False
+        keys2 = np.empty(total, dtype=np.int64)
+        keys2[keep] = old
+        keys2[newpos] = new_keys
+        vals2 = np.zeros((total, self._ncols), dtype=np.float64)
+        sizes2 = np.zeros((total, self._ncols), dtype=np.float64)
+        pres2 = np.zeros((total, self._ncols), dtype=bool)
+        vals2[keep] = self._vals
+        sizes2[keep] = self._sizes
+        pres2[keep] = self._present
+        self._keys, self._vals, self._sizes, self._present = \
+            keys2, vals2, sizes2, pres2
+
+    # -- interval boundary ------------------------------------------------------
+    def end_interval_collect(self, interval: int
+                             ) -> Tuple[np.ndarray, np.ndarray]:
+        """Evict expired columns AND return ``(keys, S(k,w))`` — one column
+        clear plus one row compaction instead of a per-key pass."""
+        cutoff = interval - self.window + 1
+        expire = (self._col_iv >= 0) & (self._col_iv < cutoff)
+        if expire.any():
+            self._vals[:, expire] = 0.0
+            self._sizes[:, expire] = 0.0
+            self._present[:, expire] = False
+            self._col_iv[expire] = -1
+            alive = self._present.any(axis=1)
+            if not alive.all():
+                self._keys = self._keys[alive]
+                self._vals = self._vals[alive]
+                self._sizes = self._sizes[alive]
+                self._present = self._present[alive]
+        return self._keys, self._sizes.sum(axis=1)
+
+    def end_interval(self, interval: int) -> None:
+        self.end_interval_collect(interval)
+
+    # -- stats ------------------------------------------------------------------
+    def sizes_arrays(self) -> Tuple[np.ndarray, np.ndarray]:
+        return self._keys, self._sizes.sum(axis=1)
+
+    def sizes(self) -> Dict[int, float]:
+        keys, sz = self.sizes_arrays()
+        return dict(zip(keys.tolist(), sz.tolist()))
+
+    def total_state_keys(self) -> int:
+        return int(self._keys.size)
+
+    # -- pack-based migration (paper steps 5-6) --------------------------------
+    def extract_batch(self, keys: np.ndarray) -> "ColumnarPack":
+        """Slice out the rows for ``keys`` (missing ones ignored) as a pack."""
+        arr = np.unique(np.asarray(keys, dtype=np.int64).ravel())
+        if arr.size and self._keys.size:
+            pos = np.searchsorted(self._keys, arr)
+            inb = pos < self._keys.size
+            rows = pos[inb][self._keys[pos[inb]] == arr[inb]]
+        else:
+            rows = np.zeros(0, dtype=np.int64)
+        pack = ColumnarPack(self._keys[rows], self._vals[rows],
+                            self._sizes[rows], self._present[rows],
+                            self._col_iv.copy())
+        if rows.size:
+            keep = np.ones(self._keys.size, dtype=bool)
+            keep[rows] = False
+            self._keys = self._keys[keep]
+            self._vals = self._vals[keep]
+            self._sizes = self._sizes[keep]
+            self._present = self._present[keep]
+        return pack
+
+    def install_batch(self, pack: "ColumnarPack") -> None:
+        if not pack.keys.size:
+            return
+        if self._keys.size and np.intersect1d(self._keys, pack.keys).size:
+            dup = np.intersect1d(self._keys, pack.keys)
+            raise RuntimeError(
+                f"key {int(dup[0])} already present on target task")
+        live = pack.col_iv >= 0
+        conflict = live & (self._col_iv >= 0) & (self._col_iv != pack.col_iv)
+        if conflict.any():
+            raise RuntimeError(
+                "columnar install across skewed interval clocks: source and "
+                "target stores disagree on column contents")
+        self._col_iv = np.where(live & (self._col_iv < 0), pack.col_iv,
+                                self._col_iv)
+        self._insert_rows(pack.keys)
+        rows = np.searchsorted(self._keys, pack.keys)
+        self._vals[rows] = pack.vals
+        self._sizes[rows] = pack.sizes
+        self._present[rows] = pack.present
+
+
+@dataclasses.dataclass
+class ColumnarPack:
+    """In-flight migration payload for the columnar backend: row slices plus
+    the source store's column->interval map (ring layouts agree across stores
+    of one stage, so installs are column-aligned)."""
+
+    keys: np.ndarray       # (M,) int64 sorted
+    vals: np.ndarray       # (M, window+1) float64
+    sizes: np.ndarray      # (M, window+1) float64
+    present: np.ndarray    # (M, window+1) bool
+    col_iv: np.ndarray     # (window+1,) int64
+
+    @property
+    def nbytes(self) -> float:
+        return float(self.sizes.sum())
+
+    def take(self, mask: np.ndarray) -> "ColumnarPack":
+        mask = np.asarray(mask, dtype=bool)
+        return ColumnarPack(self.keys[mask], self.vals[mask],
+                            self.sizes[mask], self.present[mask], self.col_iv)

@@ -85,7 +85,8 @@ class TopologyReport:
 def keyed_stage(operator: Operator, n_tasks: int, theta_max: float, *,
                 table_max: int = 2_000, window: int = 2, seed: int = 0,
                 algorithm="mixed", hash_cls=ModHash, vectorized: bool = True,
-                substrate: str = "numpy",
+                substrate: str = "numpy", state_backend: str = "auto",
+                kernel_interpret: Optional[bool] = None,
                 migration_bandwidth: float = 1e6) -> KeyedStage:
     """Convenience constructor: one stage = operator + fresh controller fleet.
 
@@ -93,6 +94,11 @@ def keyed_stage(operator: Operator, n_tasks: int, theta_max: float, *,
     pair, which is what per-stage rebalance requires — stages must never
     share a controller (their tables, Delta sets and trigger decisions are
     per-operator state, exactly as in the paper's per-operator protocol).
+    ``state_backend``/``kernel_interpret`` pass straight through to
+    :class:`~repro.streams.engine.KeyedStage` — with the defaults, every
+    built-in-operator stage gets the columnar store and the whole-interval
+    single dispatch, so the no-per-key-Python property holds across the
+    whole pipeline.
     """
     controller = RebalanceController(
         Assignment(hash_cls(n_tasks, seed=seed)),
@@ -101,6 +107,8 @@ def keyed_stage(operator: Operator, n_tasks: int, theta_max: float, *,
         algorithm=algorithm)
     return KeyedStage(operator, controller, window=window,
                       vectorized=vectorized, substrate=substrate,
+                      state_backend=state_backend,
+                      kernel_interpret=kernel_interpret,
                       migration_bandwidth=migration_bandwidth)
 
 
