@@ -15,6 +15,14 @@ identical and excluded), with parity asserted per point:
    migration) vs ``state_backend="columnar"`` (flat arrays + whole-interval
    single dispatch). Reports must be bit-identical; the JSON records both
    throughputs and the speedup.
+3. **Host-vs-device A/B** — the same K=1e5/window=4/rebalancing regime
+   under a Hash32 router (the device backend's requirement) through
+   ``state_backend="columnar"`` (host arrays) vs ``state_backend="device"``
+   (device-resident ring, one fused jitted step per interval). Parity is
+   asserted per repeat; the run FAILS (AssertionError) if the device side
+   is not at least ``REPRO_DEVICE_AB_MIN``x faster end-to-end (default
+   2.0; set the env var to 0 to disable, e.g. on machines where jax falls
+   back to an emulated backend).
 
 Run directly for JSON output:
 
@@ -30,6 +38,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 import time
 from typing import List
@@ -38,6 +47,7 @@ import numpy as np
 
 from repro.core import (Assignment, BalanceConfig, ModHash,
                         RebalanceController)
+from repro.core.balancer.hashing import Hash32
 from repro.streams import KeyedStage, WordCount, WorkloadGen
 
 FIG13_WORKLOAD = dict(k=3_000, z=0.9, f=1.0)
@@ -151,6 +161,56 @@ def _measure_store_backends(tuples_per_interval: int, intervals: int,
     }
 
 
+def _hash32_stage(backend: str, window: int, n_tasks: int,
+                  seed: int) -> KeyedStage:
+    controller = RebalanceController(
+        Assignment(Hash32(n_tasks, seed=seed)),
+        BalanceConfig(theta_max=0.08, table_max=3_000, window=window),
+        algorithm="mixed")
+    return KeyedStage(WordCount(), controller, window=window,
+                      vectorized=True, state_backend=backend)
+
+
+def _measure_device_backend(tuples_per_interval: int, intervals: int,
+                            n_tasks: int = 10, seed: int = 0) -> dict:
+    """Host (columnar) vs device state backend, same Hash32 traffic.
+
+    Both sides run the identical tuple stream under Hash32 routing (the
+    device backend's requirement); the per-interval reports must match
+    bit-for-bit, so the timing difference is purely the state
+    representation: host flat arrays + per-interval dispatch vs
+    device-resident ring + one fused jitted step."""
+    window = STORE_AB_WINDOW
+    gen = WorkloadGen(seed=seed, window=window, **STORE_AB_WORKLOAD)
+    probe = RebalanceController(
+        Assignment(Hash32(n_tasks, seed=seed)),
+        BalanceConfig(theta_max=0.08, table_max=3_000, window=window),
+        algorithm="mixed")
+    batches = _make_batches(gen, probe, tuples_per_interval, intervals)
+    stages = {b: _hash32_stage(b, window, n_tasks, seed)
+              for b in ("columnar", "device")}
+    seconds = {b: _drive(stage, batches) for b, stage in stages.items()}
+    _assert_store_parity(stages["device"], stages["columnar"])
+    total = intervals * tuples_per_interval
+    rebalances = sum(1 for ev in stages["device"].controller.history
+                     if ev.triggered)
+    assert rebalances > 0, "device A/B must exercise live rebalances"
+    return {
+        "workload": {**STORE_AB_WORKLOAD, "window": window,
+                     "tuples_per_interval": tuples_per_interval,
+                     "intervals": intervals, "n_tasks": n_tasks,
+                     "operator": "wordcount", "router": "hash32"},
+        "tuples": total,
+        "host_seconds": seconds["columnar"],
+        "device_seconds": seconds["device"],
+        "host_tuples_per_sec": total / seconds["columnar"],
+        "device_tuples_per_sec": total / seconds["device"],
+        "speedup": seconds["columnar"] / seconds["device"],
+        "rebalances": rebalances,
+        "parity": True,                     # _assert_store_parity raised if not
+    }
+
+
 def run(quick: bool = True) -> dict:
     # fig13's full interval size; quick mode trims intervals/repeats, not the
     # per-interval tuple count (segment dedup — and thus the fast path's
@@ -178,6 +238,23 @@ def run(quick: bool = True) -> dict:
     store["columnar_tuples_per_sec"] = (store["tuples"]
                                         / store["columnar_seconds"])
     store["speedup"] = store["object_seconds"] / store["columnar_seconds"]
+    # host-vs-device A/B: min per side across repeats — the first device
+    # repeat pays one-time jit traces; the jit caches are module-level, so
+    # later repeats time the steady state the backend actually runs at.
+    dev_runs = [_measure_device_backend(store_n, store_intervals)
+                for _ in range(repeats)]
+    device = dict(min(dev_runs, key=lambda r: r["device_seconds"]))
+    device["host_seconds"] = min(r["host_seconds"] for r in dev_runs)
+    device["device_seconds"] = min(r["device_seconds"] for r in dev_runs)
+    device["host_tuples_per_sec"] = device["tuples"] / device["host_seconds"]
+    device["device_tuples_per_sec"] = (device["tuples"]
+                                       / device["device_seconds"])
+    device["speedup"] = device["host_seconds"] / device["device_seconds"]
+    min_speedup = float(os.environ.get("REPRO_DEVICE_AB_MIN", "2.0"))
+    device["min_speedup"] = min_speedup
+    assert device["speedup"] >= min_speedup, (
+        f"device backend speedup {device['speedup']:.2f}x fell below the "
+        f"{min_speedup:.1f}x floor (set REPRO_DEVICE_AB_MIN=0 to disable)")
     return {
         "workload": {"figure": "fig13", **FIG13_WORKLOAD,
                      "tuples_per_interval": n, "intervals": intervals,
@@ -188,12 +265,15 @@ def run(quick: bool = True) -> dict:
         "baseline": baseline,
         "vectorized": fast,
         "store_backend": store,
+        "device_backend": device,
         # flat points for check_perf_gate.py (name -> seconds)
         "series": [
             {"name": "per_tuple_baseline", "seconds": baseline["seconds"]},
             {"name": "vectorized", "seconds": fast["seconds"]},
             {"name": "store_object", "seconds": store["object_seconds"]},
             {"name": "store_columnar", "seconds": store["columnar_seconds"]},
+            {"name": "store_host_hash32", "seconds": device["host_seconds"]},
+            {"name": "store_device", "seconds": device["device_seconds"]},
         ],
     }
 
@@ -203,6 +283,7 @@ def rows(quick: bool = True):
     us_base = 1e6 / r["baseline_tuples_per_sec"]
     us_fast = 1e6 / r["vectorized_tuples_per_sec"]
     st = r["store_backend"]
+    dv = r["device_backend"]
     return [
         ("engine_fastpath/per_tuple_baseline", us_base,
          f"tuples_per_sec={r['baseline_tuples_per_sec']:.0f}"),
@@ -215,6 +296,13 @@ def rows(quick: bool = True):
         ("engine_fastpath/store_columnar", 1e6 / st["columnar_tuples_per_sec"],
          f"tuples_per_sec={st['columnar_tuples_per_sec']:.0f};"
          f"speedup={st['speedup']:.1f}x;parity=ok"),
+        ("engine_fastpath/store_host_hash32",
+         1e6 / dv["host_tuples_per_sec"],
+         f"tuples_per_sec={dv['host_tuples_per_sec']:.0f};"
+         f"k={dv['workload']['k']};window={dv['workload']['window']}"),
+        ("engine_fastpath/store_device", 1e6 / dv["device_tuples_per_sec"],
+         f"tuples_per_sec={dv['device_tuples_per_sec']:.0f};"
+         f"speedup={dv['speedup']:.1f}x;parity=ok"),
     ]
 
 
@@ -233,7 +321,9 @@ def main() -> None:
             f.write(blob + "\n")
         print(f"wrote {args.out}: dispatch speedup {result['speedup']:.1f}x, "
               f"store-backend speedup "
-              f"{result['store_backend']['speedup']:.1f}x",
+              f"{result['store_backend']['speedup']:.1f}x, "
+              f"host-vs-device speedup "
+              f"{result['device_backend']['speedup']:.1f}x",
               file=sys.stderr)
     else:
         print(blob)

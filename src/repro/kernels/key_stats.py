@@ -25,6 +25,7 @@ from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
 from .compat import CompilerParams
+from .routing_lookup import require_int32
 
 
 def _key_stats_kernel(keys_ref, costs_ref, freq_ref, cost_ref, *, block_k: int):
@@ -50,15 +51,9 @@ def _key_stats_kernel(keys_ref, costs_ref, freq_ref, cost_ref, *, block_k: int):
 @functools.partial(jax.jit,
                    static_argnames=("num_keys", "block_n", "block_k",
                                     "interpret"))
-def key_stats(keys: jax.Array, costs: jax.Array, num_keys: int,
-              block_n: int = 512, block_k: int = 512,
-              interpret: Optional[bool] = None):
-    """Per-key frequency and cost over a tuple/token stream.
-
-    keys: (N,) int32 in [0, num_keys), -1 = padding; costs: (N,) float.
-    Returns (freq, cost) each (num_keys,) float32. ``interpret=None``
-    auto-selects: compiled on real TPU backends, interpret mode elsewhere.
-    """
+def _key_stats(keys: jax.Array, costs: jax.Array, num_keys: int,
+               block_n: int = 512, block_k: int = 512,
+               interpret: Optional[bool] = None):
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     n = keys.shape[0]
@@ -90,3 +85,25 @@ def key_stats(keys: jax.Array, costs: jax.Array, num_keys: int,
         interpret=interpret,
     )(keys_p, costs_p)
     return freq[0, :num_keys], cost[0, :num_keys]
+
+
+def key_stats(keys: jax.Array, costs: jax.Array, num_keys: int,
+              block_n: int = 512, block_k: int = 512,
+              interpret: Optional[bool] = None):
+    """Per-key frequency and cost over a tuple/token stream.
+
+    keys: (N,) int32 in [0, num_keys), -1 = padding; costs: (N,) float.
+    Returns (freq, cost) each (num_keys,) float32. ``interpret=None``
+    auto-selects: compiled on real TPU backends, interpret mode elsewhere.
+
+    ``keys`` must already be int32 — enforced outside the jit boundary so a
+    wider dtype raises TypeError instead of aliasing ids >= 2**31 (costs may
+    be any float dtype; they accumulate in float32 either way).
+    """
+    require_int32("key_stats", "keys", keys)
+    return _key_stats(keys, costs, num_keys, block_n=block_n,
+                      block_k=block_k, interpret=interpret)
+
+
+if hasattr(_key_stats, "_cache_size"):           # retrace-counting test hook
+    key_stats._cache_size = _key_stats._cache_size

@@ -19,10 +19,27 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
 from .compat import CompilerParams
+
+
+def require_int32(kernel: str, name: str, arr) -> None:
+    """Int32 contract check, outside the jit boundary.
+
+    The kernels' integer lanes are 32-bit: a wider (or float) key array
+    would be truncated inside the kernel and ids >= 2**31 would silently
+    alias other keys instead of failing. Callers must validate the value
+    range and cast explicitly (``KeyedStage._dest_batch`` does)."""
+    dtype = np.dtype(getattr(arr, "dtype", np.asarray(arr).dtype))
+    if dtype != np.dtype(np.int32):
+        raise TypeError(
+            f"{kernel} requires int32 {name} (got {dtype.name}): the kernel "
+            "operates on 32-bit integer lanes, so wider ids would silently "
+            "alias after truncation — validate ids are in [0, 2**31) and "
+            "cast explicitly")
 
 
 def _fmix32(h):
@@ -51,16 +68,10 @@ def _routing_kernel(keys_ref, tkeys_ref, tdests_ref, out_ref, *, n_dest: int,
 
 @functools.partial(jax.jit,
                    static_argnames=("n_dest", "seed", "block_n", "interpret"))
-def routing_lookup(keys: jax.Array, table_keys: jax.Array,
-                   table_dests: jax.Array, n_dest: int, seed: int = 0,
-                   block_n: int = 1024,
-                   interpret: Optional[bool] = None) -> jax.Array:
-    """Vectorized F(k) for a token/tuple block. -1 table slots = empty.
-
-    ``interpret=None`` (default) auto-selects: compiled Mosaic on real TPU
-    backends, interpret mode elsewhere (CPU/GPU have no lowering for this
-    kernel). Both values are static, so the choice is baked per trace.
-    """
+def _routing_lookup(keys: jax.Array, table_keys: jax.Array,
+                    table_dests: jax.Array, n_dest: int, seed: int = 0,
+                    block_n: int = 1024,
+                    interpret: Optional[bool] = None) -> jax.Array:
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     n = keys.shape[0]
@@ -89,3 +100,28 @@ def routing_lookup(keys: jax.Array, table_keys: jax.Array,
         interpret=interpret,
     )(keys_p, tkeys_p, tdests_p)
     return out[0, :n]
+
+
+def routing_lookup(keys: jax.Array, table_keys: jax.Array,
+                   table_dests: jax.Array, n_dest: int, seed: int = 0,
+                   block_n: int = 1024,
+                   interpret: Optional[bool] = None) -> jax.Array:
+    """Vectorized F(k) for a token/tuple block. -1 table slots = empty.
+
+    ``interpret=None`` (default) auto-selects: compiled Mosaic on real TPU
+    backends, interpret mode elsewhere (CPU/GPU have no lowering for this
+    kernel). Both values are static, so the choice is baked per trace.
+
+    All three arrays must already be int32 — this unjitted wrapper enforces
+    the contract (raises TypeError) before any tracing happens, so a wrong
+    dtype fails loudly instead of silently aliasing key ids >= 2**31.
+    """
+    require_int32("routing_lookup", "keys", keys)
+    require_int32("routing_lookup", "table_keys", table_keys)
+    require_int32("routing_lookup", "table_dests", table_dests)
+    return _routing_lookup(keys, table_keys, table_dests, n_dest, seed=seed,
+                           block_n=block_n, interpret=interpret)
+
+
+if hasattr(_routing_lookup, "_cache_size"):      # retrace-counting test hook
+    routing_lookup._cache_size = _routing_lookup._cache_size

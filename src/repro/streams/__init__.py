@@ -16,5 +16,14 @@ __all__ = [
     "IntervalBatchResult", "MergeCounts", "Operator", "PartialWordCount",
     "WindowedSelfJoin", "WordCount", "ColumnarSpec", "ColumnarStateStore",
     "KeyState", "TaskStateStore", "StageSpec", "Topology", "TopologyReport",
-    "keyed_stage",
+    "keyed_stage", "DeviceStateFleet", "DeviceTaskView",
 ]
+
+
+def __getattr__(name):
+    # The device backend imports jax at module scope; loading it lazily keeps
+    # `import repro.streams` jax-free for ModHash/object-backend users.
+    if name in ("DeviceStateFleet", "DeviceTaskView"):
+        from . import device
+        return getattr(device, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -63,7 +63,7 @@ from .operators import Operator
 from .state import ColumnarStateStore, TaskStateStore
 
 SUBSTRATES = ("numpy", "pallas")
-STATE_BACKENDS = ("auto", "columnar", "object")
+STATE_BACKENDS = ("auto", "columnar", "object", "device")
 
 
 @dataclasses.dataclass
@@ -97,7 +97,16 @@ class KeyedStage:
         instead of a per-task Python loop. ``"object"`` forces the dict-of-
         KeyState store (the compatibility/parity backend, and the only one
         custom per-tuple operators can use); ``"columnar"`` forces the array
-        store and raises if the operator cannot support it.
+        store and raises if the operator cannot support it. ``"device"``
+        keeps state as device-resident arrays and fuses the whole interval
+        into one jitted step (see :mod:`repro.streams.device`); it requires
+        vectorized=True, a Hash32 router and an operator with device closed
+        forms (``device_mode``) — ``"auto"`` picks it only when those hold
+        AND jax runs on an accelerator backend (on CPU the columnar store
+        wins, so auto behavior there is unchanged).
+      device_domain_max: the device backend allocates dense state per key id;
+        ids at or above this bound raise instead of silently exploding
+        memory (sparse huge domains belong on the columnar backend).
       kernel_interpret: Pallas ``interpret=`` mode for the routing/stats
         kernels. ``None`` (default) auto-selects: compiled on real TPU
         backends, interpret elsewhere (CPU has no Mosaic lowering).
@@ -112,7 +121,8 @@ class KeyedStage:
                  vectorized: bool = True, substrate: str = "numpy",
                  state_backend: str = "auto",
                  kernel_interpret: Optional[bool] = None,
-                 stats_dense_max: int = 1 << 20):
+                 stats_dense_max: int = 1 << 20,
+                 device_domain_max: int = 1 << 22):
         if substrate not in SUBSTRATES:
             raise ValueError(f"unknown substrate {substrate!r}; "
                              f"choose from {SUBSTRATES}")
@@ -124,7 +134,13 @@ class KeyedStage:
         self.window = window
         self.n_tasks = controller.assignment.n_dest
         spec = getattr(operator, "columnar_spec", None)
-        if state_backend == "columnar":
+        dev_mode = getattr(operator, "device_mode", None)
+        self._device = False
+        if state_backend == "device":
+            self._check_device_support(operator, vectorized, spec, dev_mode)
+            self._device = True
+            self._columnar = False
+        elif state_backend == "columnar":
             if spec is None:
                 raise ValueError(
                     f"state_backend='columnar' requires an operator with a "
@@ -138,8 +154,18 @@ class KeyedStage:
         else:
             self._columnar = (state_backend == "auto" and vectorized
                               and spec is not None)
-        self.state_backend = "columnar" if self._columnar else "object"
-        self.stores = [self._new_store() for _ in range(self.n_tasks)]
+            # auto-promote to the device backend only when every device
+            # requirement already holds AND jax runs on an accelerator —
+            # checked lazily so ModHash/object stages never import jax
+            if self._columnar and dev_mode is not None \
+                    and self._is_hash32_router():
+                import jax                       # lazy
+                if jax.default_backend() != "cpu":
+                    self._device = True
+                    self._columnar = False
+        self.state_backend = ("device" if self._device
+                              else "columnar" if self._columnar else "object")
+        self.device_domain_max = device_domain_max
         self.migration_bandwidth = migration_bandwidth
         self.micro_batches = micro_batches
         self.migration_batches = migration_batches
@@ -160,10 +186,50 @@ class KeyedStage:
         self._kernel_interpret = kernel_interpret
         if substrate == "pallas":
             self._init_pallas(kernel_interpret)
+        if self._device:
+            self._init_device()
+        self.stores = [self._new_store() for _ in range(self.n_tasks)]
         # wire the migration executor (paper steps 5-6)
-        self.controller.executor = self._migrate
+        self.controller.executor = (self._migrate_device if self._device
+                                    else self._migrate)
+
+    def _is_hash32_router(self) -> bool:
+        from repro.core.balancer.hashing import Hash32
+        return isinstance(self.controller.assignment.hash_router, Hash32)
+
+    def _check_device_support(self, operator, vectorized, spec,
+                              dev_mode) -> None:
+        if not vectorized:
+            raise ValueError("state_backend='device' requires "
+                             "vectorized=True (the per-tuple reference path "
+                             "uses scalar state access)")
+        if dev_mode is None or spec is None:
+            raise ValueError(
+                f"state_backend='device' requires an operator with device "
+                f"closed forms (device_mode + columnar_spec); "
+                f"{type(operator).__name__} has none — such operators fall "
+                "back to the columnar/object store under 'auto'")
+        if not self._is_hash32_router():
+            router = self.controller.assignment.hash_router
+            raise ValueError(
+                "state_backend='device' requires a Hash32 router (device-"
+                f"canonical fmix32); got {type(router).__name__}. ModHash's "
+                "splitmix64 has no 32-bit device equivalent.")
+
+    def _init_device(self) -> None:
+        from .device import DeviceStateFleet
+        self._device_seed = self.controller.assignment.hash_router.seed
+        self._fleet = DeviceStateFleet(self.window, self.operator.columnar_spec)
+        self._dest_dense_cache = None   # (cache key, device dests, host dests)
+        self._views_made = 0
 
     def _new_store(self):
+        if self._device:
+            from .device import DeviceTaskView
+            idx = (len(self.stores) if hasattr(self, "stores")
+                   else self._views_made)
+            self._views_made += 1
+            return DeviceTaskView(self._fleet, idx)
         if self._columnar:
             return ColumnarStateStore(self.window, self.operator.columnar_spec)
         return TaskStateStore(self.window)
@@ -221,6 +287,208 @@ class KeyedStage:
         self._pending_delta = None
         self._pending_delta_arr = keys
 
+    def _migrate_device(self, moved_keys: np.ndarray, old: Assignment,
+                        new: Assignment) -> None:
+        """Device-backend migration executor: zero device work.
+
+        State is key-indexed on the device, so moving a key between tasks
+        only relabels host ownership; migrated bytes come from the ``mem``
+        mirror's closed-form S(k, w) — the exact per-pack sums the columnar
+        executor reports, because every quantity is an integer-valued
+        float64 (order-free exact summation)."""
+        keys = np.asarray(moved_keys, dtype=np.int64)
+        src = old.dest(keys)
+        dst = new.dest(keys)
+        moving = src != dst
+        mkeys = keys[moving]
+        fleet = self._fleet
+        if mkeys.size and fleet.domain:
+            ok = (mkeys >= 0) & (mkeys < fleet.domain)
+            mk = mkeys[ok]
+            held = fleet.task[mk] >= 0
+            hk = mk[held]
+            self._migrated_bytes_pending += float(fleet.mem[hk].sum())
+            fleet.task[hk] = dst[moving][ok][held].astype(np.int32)
+        self._pending_delta = None
+        self._pending_delta_arr = keys
+
+    # -- device fast path (state_backend="device") ------------------------------
+    def _dest_dense_arrays(self):
+        """Dense F(k) table over every key id, refreshed once per
+        ``assignment_version`` (and per domain growth) — the device twin of
+        ``_dest_batch``'s routing-table cache, sharing its power-of-two
+        high-water table capacity so table churn never retraces."""
+        assignment = self.controller.assignment
+        needed = max(128, 1 << max(0, assignment.table_size - 1).bit_length())
+        if needed > self._table_capacity:
+            self._table_capacity = needed
+        cache_key = (self.controller.assignment_version,
+                     assignment.table_size, self._table_capacity,
+                     self._fleet.domain, self.n_tasks)
+        if self._dest_dense_cache is None \
+                or self._dest_dense_cache[0] != cache_key:
+            tk, td = assignment.table_arrays(self._table_capacity)
+            dev = self._fleet.route_dense(
+                tk, td, assignment.n_dest, seed=self._device_seed,
+                use_kernel=(self.substrate == "pallas"),
+                interpret=self._kernel_interpret)
+            self._dest_dense_cache = (cache_key, dev,
+                                      np.asarray(dev).astype(np.int64))
+        return self._dest_dense_cache[1], self._dest_dense_cache[2]
+
+    def _process_interval_device(self, keys: np.ndarray,
+                                 values: Optional[Sequence[Any]] = None,
+                                 collect_emits: bool = False):
+        """One interval as ONE fused device step (see streams/device.py).
+
+        The pause-window macro-batch split of the vectorized path telescopes
+        for device operators (their closed forms are batch-boundary
+        invariant), so only the ``buffered`` count needs the host split; the
+        step itself sees the whole interval."""
+        self._interval += 1
+        iv = self._interval
+        n = int(keys.shape[0])
+        fleet = self._fleet
+        op = self.operator
+        spec = op.columnar_spec
+
+        buffered_count = 0
+        if n and self._pending_delta_arr is not None:
+            edges = np.linspace(0, n, self.micro_batches + 1).astype(int)
+            pause_hi = edges[min(self.migration_batches, self.micro_batches)]
+            buffered_count = int(np.isin(keys[:pause_hi],
+                                         self._pending_delta_arr).sum())
+        self._pending_delta = None
+        self._pending_delta_arr = None
+
+        # ring-column bookkeeping (host mirror of the columnar _col_iv)
+        w1 = self.window + 1
+        c = iv % w1
+        col_iv = fleet.col_iv
+        if n:
+            if col_iv[c] not in (-1, iv):
+                raise RuntimeError(
+                    f"device ring column clock skew: column {c} still holds "
+                    f"interval {int(col_iv[c])} at interval {iv}")
+            col_iv[c] = iv
+        cutoff = iv - self.window + 1
+        expire = (col_iv >= 0) & (col_iv < cutoff)
+        keep = (~expire).astype(np.int32)
+        col_iv[expire] = -1
+
+        task_cost = np.zeros(self.n_tasks)
+        stats: Optional[KeyStats] = None
+        win0_h = slot0_h = None
+
+        if n:
+            kmin, kmax = int(keys.min()), int(keys.max())
+            if kmin < 0:
+                raise ValueError(
+                    f"state_backend='device' requires non-negative key ids; "
+                    f"got {kmin}")
+            if kmax >= self.device_domain_max:
+                raise ValueError(
+                    f"key id {kmax} exceeds device_domain_max="
+                    f"{self.device_domain_max}: the dense device backend "
+                    "allocates state per key id — raise device_domain_max or "
+                    "use the columnar backend for sparse huge domains")
+            fleet.ensure_domain(kmax + 1)
+            dest_dev, dest_host = self._dest_dense_arrays()
+            cur = np.zeros(w1, dtype=np.int32)
+            cur[c] = 1
+            tv = None
+            if op.device_mode == "max":
+                tv64 = np.asarray(values).astype(np.int64)
+                if tv64.size and not (
+                        int(tv64.min()) > np.iinfo(np.int32).min
+                        and int(tv64.max()) <= np.iinfo(np.int32).max):
+                    raise ValueError(
+                        "state_backend='device' folds values in int32; "
+                        "tuple value out of int32 range")
+                tv = tv64
+            step = fleet.interval_step(keys, tv, dest_dev, self.n_tasks,
+                                       keep, cur, op.device_mode)
+            dom = fleet.domain
+            counts_h = np.asarray(step[0])[:dom]
+            win0_h = np.asarray(step[1])[:dom]
+            slot0_h = np.asarray(step[2])[:dom]
+            held_cnt = np.asarray(step[3])[:dom]
+            held_sum = np.asarray(step[4])[:dom]
+
+            seen_mask = counts_h > 0
+            gk = np.nonzero(seen_mask)[0].astype(np.int64)
+            key_cost_g, out_vals, emit_sum = op.device_finish(
+                counts_h[seen_mask].astype(np.int64),
+                win0_h[seen_mask].astype(np.int64),
+                slot0_h[seen_mask].astype(np.int64))
+            if out_vals is not None:
+                self.outputs.update(zip(gk.tolist(), out_vals.tolist()))
+            self.emitted_sum += emit_sum
+            if op.device_unit_cost:
+                if step[5] is not None:           # max mode: device bincount
+                    task_cost = np.asarray(step[5]).astype(np.float64)
+                else:                             # add mode: counts are host
+                    task_cost = np.bincount(dest_host[:dom],
+                                            weights=counts_h,
+                                            minlength=self.n_tasks)
+            else:
+                task_cost = np.bincount(dest_host[gk], weights=key_cost_g,
+                                        minlength=self.n_tasks)
+
+            # host mirrors: ownership labels (new keys adopt F(k); evicted
+            # keys clear) and the closed-form S(k, w) per key
+            alive = held_cnt > 0
+            t = fleet.task
+            t[:dom] = np.where(alive,
+                               np.where(t[:dom] >= 0, t[:dom],
+                                        dest_host[:dom].astype(np.int32)),
+                               -1)
+            fleet.mem[:dom] = (spec.slot_bytes * held_cnt
+                               + spec.bytes_per_unit * held_sum)
+            fleet.mem[:dom][~alive] = 0.0
+
+            # stat universe = seen ∪ held == alive: a seen key's current slot
+            # never expires at its own boundary, so seen ⊆ held-after
+            uni = np.nonzero(alive)[0].astype(np.int64)
+            if uni.size:
+                cost = np.zeros(uni.size, dtype=np.float64)
+                cost[np.searchsorted(uni, gk)] = key_cost_g
+                stats = KeyStats(keys=uni,
+                                 cost=cost,
+                                 mem=fleet.mem[uni].copy(),
+                                 freq=counts_h[alive].astype(np.float64))
+        else:
+            if fleet.domain and expire.any():
+                held_cnt, held_sum = fleet.evict(keep)
+                dom = fleet.domain
+                alive = held_cnt[:dom] > 0
+                fleet.task[:dom] = np.where(alive, fleet.task[:dom], -1)
+                fleet.mem[:dom] = (spec.slot_bytes * held_cnt[:dom]
+                                   + spec.bytes_per_unit * held_sum[:dom])
+                fleet.mem[:dom][~alive] = 0.0
+            if fleet.domain:
+                uni = np.nonzero(fleet.task[:fleet.domain] >= 0)[0] \
+                    .astype(np.int64)
+                if uni.size:
+                    stats = KeyStats(keys=uni,
+                                     cost=np.zeros(uni.size),
+                                     mem=fleet.mem[uni].copy(),
+                                     freq=np.zeros(uni.size))
+
+        report = self._finish_interval(iv, n, task_cost, buffered_count, stats)
+        if not collect_emits:
+            return report
+        if n == 0:
+            return report, np.zeros(0, np.int64), np.zeros(0, np.float64)
+        _, inv, ucounts = np.unique(keys, return_inverse=True,
+                                    return_counts=True)
+        from .operators import _occurrence_index
+        occ = _occurrence_index(inv, ucounts)
+        evals = op.device_emit_values(keys, occ, win0_h, slot0_h)
+        if evals is None:
+            return report, np.zeros(0, np.int64), np.zeros(0, np.float64)
+        return report, keys.astype(np.int64, copy=False), evals
+
     # -- one interval of traffic ------------------------------------------------
     def process_interval(self, tuples: Sequence[Tuple[int, Any]]) -> IntervalReport:
         """Process one interval given ``(key, value)`` tuples (list API)."""
@@ -237,6 +505,8 @@ class KeyedStage:
         False). This is the zero-conversion path used by the benchmarks."""
         if not self.vectorized:
             return self._process_interval_reference(keys, values)
+        if self._device:
+            return self._process_interval_device(keys, values)
         return self._process_interval_vectorized(keys, values)
 
     def process_interval_emits(self, keys: np.ndarray,
@@ -256,6 +526,9 @@ class KeyedStage:
         if not self.vectorized:
             return self._process_interval_reference(keys, values,
                                                     collect_emits=True)
+        if self._device:
+            return self._process_interval_device(keys, values,
+                                                 collect_emits=True)
         return self._process_interval_vectorized(keys, values,
                                                  collect_emits=True)
 

@@ -244,6 +244,40 @@ class Operator:
     #: differ from ``needs_values``: the columnar self-join derives everything
     #: from counts and never stores the raw tuples).
     columnar_needs_values = True
+    #: "add" / "max" when the operator's slot fold has a device closed form
+    #: (must match ``columnar_spec.mode``); None = no device form, so the
+    #: engine's ``state_backend="auto"`` never picks the device backend and
+    #: an explicit ``"device"`` request raises (see streams/device.py).
+    device_mode: Optional[str] = None
+    #: True when per-key cost == tuple frequency (1.0 cost units per tuple):
+    #: the engine then reads task loads straight off the fused step's integer
+    #: per-task bincount instead of a host bincount over float costs.
+    device_unit_cost = False
+
+    def device_finish(self, counts: np.ndarray, win0: np.ndarray,
+                      slot0: np.ndarray
+                      ) -> Tuple[np.ndarray, Optional[np.ndarray], float]:
+        """Host closed forms over the fused step's per-key integers.
+
+        Arguments are (m,) int64 arrays for the keys SEEN this interval
+        (sorted ascending): tuple counts, windowed totals before the update,
+        and current-slot totals before the update. Returns
+        ``(key_cost float64, output_values int64 or None, emit_sum)`` — the
+        exact quantities ``process_interval_batch`` derives, computed from
+        the same integers, so reports stay bit-identical.
+        """
+        raise NotImplementedError
+
+    def device_emit_values(self, keys: np.ndarray, occ: np.ndarray,
+                           win0_dense: np.ndarray, slot0_dense: np.ndarray
+                           ) -> Optional[np.ndarray]:
+        """Per-tuple emit values (input order) from dense step outputs.
+
+        ``occ`` is each tuple's occurrence index within its key;
+        ``win0_dense``/``slot0_dense`` are the step's (domain,) pre-update
+        totals indexed by key id. None = the operator emits nothing.
+        """
+        raise NotImplementedError
 
     def process(self, store: TaskStateStore, interval: int, key: int,
                 value: Any) -> Tuple[List[Tuple[int, Any]], float]:
@@ -335,6 +369,8 @@ class WordCount(Operator):
     name = "wordcount"
     needs_values = False
     columnar_needs_values = False
+    device_mode = "add"
+    device_unit_cost = True
 
     def __init__(self, bytes_per_entry: float = 16.0):
         self.bytes_per_entry = bytes_per_entry
@@ -394,12 +430,21 @@ class WordCount(Operator):
                                         n_tasks, collect_emits,
                                         window_total=True)
 
+    def device_finish(self, counts, win0, slot0):
+        emit = float(np.dot(counts, win0) + np.dot(counts, counts + 1) / 2.0)
+        return counts.astype(np.float64), win0 + counts, emit
+
+    def device_emit_values(self, keys, occ, win0_dense, slot0_dense):
+        # the j-th occurrence of a key emits its running window total c0 + j
+        return win0_dense[keys].astype(np.int64) + occ + 1
+
 
 class WindowedSelfJoin(Operator):
     name = "selfjoin"
     #: columnar mode derives matches/costs from per-slot tuple COUNTS and
     #: does not retain the raw tuple payloads (nothing downstream reads them)
     columnar_needs_values = False
+    device_mode = "add"
 
     def __init__(self, bytes_per_tuple: float = 32.0, probe_cost: float = 0.01):
         self.bytes_per_tuple = bytes_per_tuple
@@ -481,6 +526,15 @@ class WindowedSelfJoin(Operator):
         return res, (np.ones(keys.size, dtype=np.int64),
                      keys.astype(np.int64, copy=False), evals)
 
+    def device_finish(self, counts, win0, slot0):
+        probes = counts * win0 + counts * (counts - 1) / 2.0
+        key_cost = counts * 1.0 + self.probe_cost * probes
+        return key_cost, win0 + counts - 1, float(probes.sum())
+
+    def device_emit_values(self, keys, occ, win0_dense, slot0_dense):
+        # the j-th occurrence emits its probe-time match count c0 + (j-1)
+        return win0_dense[keys].astype(np.int64) + occ
+
 
 class PartialWordCount(Operator):
     """Split-key (PKG-style) word count: emits partial counts that must be
@@ -489,6 +543,8 @@ class PartialWordCount(Operator):
     name = "partial_wordcount"
     needs_values = False
     columnar_needs_values = False
+    device_mode = "add"
+    device_unit_cost = True
 
     def __init__(self, bytes_per_entry: float = 16.0):
         self.bytes_per_entry = bytes_per_entry
@@ -543,11 +599,19 @@ class PartialWordCount(Operator):
                                         n_tasks, collect_emits,
                                         window_total=False)
 
+    def device_finish(self, counts, win0, slot0):
+        emit = float(np.dot(counts, slot0) + np.dot(counts, counts + 1) / 2.0)
+        return counts.astype(np.float64), slot0 + counts, emit
+
+    def device_emit_values(self, keys, occ, win0_dense, slot0_dense):
+        return slot0_dense[keys].astype(np.int64) + occ + 1
+
 
 class MergeCounts(Operator):
     """PKG's downstream merger: combines partial counts per key."""
 
     name = "merge"
+    device_mode = "max"
 
     def __init__(self):
         self.bytes_per_entry = 16.0
@@ -600,6 +664,13 @@ class MergeCounts(Operator):
             return res, None
         return res, (np.zeros(keys.size, dtype=np.int64),
                      np.zeros(0, dtype=np.int64), np.zeros(0, dtype=np.float64))
+
+    def device_finish(self, counts, win0, slot0):
+        # terminal operator: absorbs partials, emits nothing downstream
+        return 0.5 * counts.astype(np.float64), None, 0.0
+
+    def device_emit_values(self, keys, occ, win0_dense, slot0_dense):
+        return None
 
 
 class Filter(Operator):

@@ -342,6 +342,24 @@ class ColumnarStateStore:
         self._sizes = np.zeros((0, self._ncols), dtype=np.float64)
         self._present = np.zeros((0, self._ncols), dtype=bool)
         self._col_iv = np.full(self._ncols, -1, dtype=np.int64)
+        self._clock = None            # monotonic interval high-water mark
+
+    def _advance_clock(self, interval: int, what: str) -> int:
+        """Reject non-monotonic interval arguments.
+
+        The ring position is ``interval % (window+1)``, so writing (or
+        evicting at) an interval older than one already processed would
+        silently alias a live column — corrupting window totals instead of
+        failing. Equal intervals are fine (macro-batches within one
+        interval, update followed by the boundary collect)."""
+        interval = int(interval)
+        if self._clock is not None and interval < self._clock:
+            raise ValueError(
+                f"non-monotonic interval: {what}({interval}) after the store "
+                f"already advanced to interval {self._clock}; the window "
+                f"ring (size {self._ncols}) would alias a live column")
+        self._clock = interval
+        return interval
 
     # -- introspection (dict-store-compatible surface) -------------------------
     @property
@@ -391,7 +409,8 @@ class ColumnarStateStore:
         """
         keys = np.asarray(keys, dtype=np.int64)
         add = np.asarray(add, dtype=np.float64)
-        c = int(interval) % self._ncols
+        interval = self._advance_clock(interval, "update_slots")
+        c = interval % self._ncols
         if self._col_iv[c] != interval:
             # the ring slot last held interval - (window+1), which eviction
             # cleared at the previous boundary; the wipe below only does work
@@ -454,6 +473,7 @@ class ColumnarStateStore:
                              ) -> Tuple[np.ndarray, np.ndarray]:
         """Evict expired columns AND return ``(keys, S(k,w))`` — one column
         clear plus one row compaction instead of a per-key pass."""
+        interval = self._advance_clock(interval, "end_interval_collect")
         cutoff = interval - self.window + 1
         expire = (self._col_iv >= 0) & (self._col_iv < cutoff)
         if expire.any():

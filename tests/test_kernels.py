@@ -97,6 +97,90 @@ def test_routing_table_override_wins():
     assert int(out[1]) == 9
 
 
+# ------------------------------------------------- int32 dtype contract --
+# The kernels' integer lanes are 32-bit. A wider key array would be
+# truncated inside the trace, so ids >= 2**31 would silently alias other
+# keys — the public wrappers must REJECT wide dtypes loudly instead.
+
+_EMPTY_K = jnp.full((8,), -1, jnp.int32)
+_EMPTY_D = jnp.zeros((8,), jnp.int32)
+
+
+@pytest.mark.parametrize("bad", [jnp.int64, jnp.float32, jnp.uint32])
+def test_routing_lookup_rejects_non_int32_keys(bad):
+    with jax.experimental.enable_x64():
+        keys = jnp.asarray([1, 2, 3]).astype(bad)
+        with pytest.raises(TypeError, match="int32 keys"):
+            routing_lookup(keys, _EMPTY_K, _EMPTY_D, 4, interpret=True)
+
+
+def test_routing_lookup_rejects_non_int32_table():
+    keys = jnp.asarray([1, 2, 3], jnp.int32)
+    with pytest.raises(TypeError, match="int32 table_keys"):
+        routing_lookup(keys, _EMPTY_K.astype(jnp.float32), _EMPTY_D, 4,
+                       interpret=True)
+    with pytest.raises(TypeError, match="int32 table_dests"):
+        routing_lookup(keys, _EMPTY_K, _EMPTY_D.astype(jnp.int16), 4,
+                       interpret=True)
+
+
+@pytest.mark.parametrize("bad", [jnp.int64, jnp.float32, jnp.int16])
+def test_key_stats_rejects_non_int32_keys(bad):
+    with jax.experimental.enable_x64():
+        keys = jnp.asarray([0, 1, 2]).astype(bad)
+        with pytest.raises(TypeError, match="int32 keys"):
+            key_stats(keys, jnp.ones((3,), jnp.float32), 4, interpret=True)
+
+
+def _int32_edge_keys():
+    """int32 boundary ids plus keys whose fmix32 hash lands >= 2**31 —
+    the mix/modulo must stay unsigned end-to-end or those wrap negative."""
+    edge = np.array([0, 1, 2**31 - 2, 2**31 - 1], dtype=np.int32)
+    probe = np.arange(4096, dtype=np.int64)
+    high = probe[np_fmix32(probe.astype(np.uint32), 5) >= 2**31]
+    assert high.size > 0                         # the regression is exercised
+    return np.concatenate([edge.astype(np.int64), high[:64]])
+
+
+def test_routing_boundary_keys_match_host_interpret():
+    keys = _int32_edge_keys()
+    host = Hash32(13, seed=5)(keys)
+    dev = routing_lookup(jnp.asarray(keys, jnp.int32), _EMPTY_K, _EMPTY_D,
+                         13, seed=5, interpret=True)
+    np.testing.assert_array_equal(np.asarray(dev), host)
+
+
+def test_key_stats_boundary_ids_interpret():
+    """num_keys stays modest (dense histogram) but the VALUES flowing through
+    the match matrix include int32 max ids — they must count as misses, not
+    alias into the [0, num_keys) range after any internal widening."""
+    keys = jnp.asarray([0, 3, 2**31 - 1, 3, 2**31 - 2], jnp.int32)
+    freq, cost = key_stats(keys, jnp.ones((5,), jnp.float32), 4,
+                           block_n=8, block_k=8, interpret=True)
+    np.testing.assert_allclose(freq, [1, 0, 0, 2])
+    np.testing.assert_allclose(cost, [1, 0, 0, 2])
+
+
+@pytest.mark.skipif(jax.default_backend() != "tpu",
+                    reason="compiled Mosaic path needs a real TPU backend")
+def test_routing_boundary_keys_match_host_compiled():
+    keys = _int32_edge_keys()
+    host = Hash32(13, seed=5)(keys)
+    dev = routing_lookup(jnp.asarray(keys, jnp.int32), _EMPTY_K, _EMPTY_D,
+                         13, seed=5, interpret=False)
+    np.testing.assert_array_equal(np.asarray(dev), host)
+
+
+@pytest.mark.skipif(jax.default_backend() != "tpu",
+                    reason="compiled Mosaic path needs a real TPU backend")
+def test_key_stats_boundary_ids_compiled():
+    keys = jnp.asarray([0, 3, 2**31 - 1, 3, 2**31 - 2], jnp.int32)
+    freq, cost = key_stats(keys, jnp.ones((5,), jnp.float32), 4,
+                           interpret=False)
+    np.testing.assert_allclose(freq[:4], [1, 0, 0, 2])
+    np.testing.assert_allclose(cost[:4], [1, 0, 0, 2])
+
+
 # ------------------------------------------------------- flash attention --
 @pytest.mark.parametrize("b,hq,hkv,t,s,d", [
     (1, 2, 2, 64, 64, 32),        # MHA square

@@ -1,0 +1,135 @@
+"""Unit tests for the CI perf-regression gate (benchmarks/check_perf_gate.py).
+
+The gate script is CI-critical: a bug that makes it exit 0 on garbage input
+silently disables regression protection for every future PR. These tests
+drive ``main()`` with synthetic fresh/baseline JSON pairs through every
+outcome: clean pass, >max-ratio regression (exit 1), noise-floor exemption,
+and the misconfiguration paths that must exit 2 rather than pass.
+"""
+
+import json
+import sys
+
+import pytest
+
+from benchmarks import check_perf_gate
+
+
+def _write(path, payload):
+    path.write_text(json.dumps(payload))
+    return str(path)
+
+
+def _planner_json(tmp_path, name, times):
+    """times: {(profile, algo, k): plan_time_s}"""
+    series = [{"profile": p, "algo": a, "k": k, "plan_time_s": t}
+              for (p, a, k), t in times.items()]
+    return _write(tmp_path / name, {"series": series})
+
+
+def _fastpath_json(tmp_path, name, times):
+    """times: {point_name: seconds}"""
+    series = [{"name": n, "seconds": s} for n, s in times.items()]
+    return _write(tmp_path / name, {"series": series})
+
+
+def _run_gate(monkeypatch, argv):
+    monkeypatch.setattr(sys, "argv", ["check_perf_gate.py"] + argv)
+    check_perf_gate.main()
+
+
+def test_gate_passes_within_ratio(tmp_path, monkeypatch, capsys):
+    base = _planner_json(tmp_path, "base.json",
+                         {("zipf", "mixed", 10_000): 0.10,
+                          ("zipf", "mixed", 30_000): 0.40})
+    fresh = _planner_json(tmp_path, "fresh.json",
+                          {("zipf", "mixed", 10_000): 0.15,
+                           ("zipf", "mixed", 30_000): 0.50})
+    _run_gate(monkeypatch, ["--fresh", fresh, "--baseline", base])
+    assert "perf gate OK: 2 gated points" in capsys.readouterr().out
+
+
+def test_gate_fails_on_regression(tmp_path, monkeypatch, capsys):
+    base = _fastpath_json(tmp_path, "base.json",
+                          {"store_ab/columnar": 0.10,
+                           "store_ab/device": 0.05})
+    fresh = _fastpath_json(tmp_path, "fresh.json",
+                           {"store_ab/columnar": 0.11,
+                            "store_ab/device": 0.12})   # 2.4x: regressed
+    with pytest.raises(SystemExit) as e:
+        _run_gate(monkeypatch, ["--fastpath-fresh", fresh,
+                                "--fastpath-baseline", base])
+    assert e.value.code == 1
+    err = capsys.readouterr().err
+    assert "store_ab/device: 2.40x" in err
+
+
+def test_gate_max_ratio_is_configurable(tmp_path, monkeypatch):
+    base = _fastpath_json(tmp_path, "base.json", {"a": 0.10})
+    fresh = _fastpath_json(tmp_path, "fresh.json", {"a": 0.25})  # 2.5x
+    with pytest.raises(SystemExit):
+        _run_gate(monkeypatch, ["--fastpath-fresh", fresh,
+                                "--fastpath-baseline", base])
+    _run_gate(monkeypatch, ["--fastpath-fresh", fresh,
+                            "--fastpath-baseline", base,
+                            "--max-ratio", "3.0"])      # same pair now passes
+
+
+def test_noise_floor_exempts_tiny_baselines(tmp_path, monkeypatch, capsys):
+    """A 10x swing on a sub-floor point is reported but not gated — only
+    the point whose baseline clears --min-baseline-s counts."""
+    base = _planner_json(tmp_path, "base.json",
+                         {("zipf", "mixed", 5_000): 0.001,   # < 15 ms floor
+                          ("zipf", "mixed", 100_000): 1.00})
+    fresh = _planner_json(tmp_path, "fresh.json",
+                          {("zipf", "mixed", 5_000): 0.010,  # 10x, exempt
+                           ("zipf", "mixed", 100_000): 1.10})
+    _run_gate(monkeypatch, ["--fresh", fresh, "--baseline", base])
+    out = capsys.readouterr().out
+    assert "ungated: baseline < 15 ms" in out
+    assert "perf gate OK: 1 gated points" in out
+
+
+def test_all_points_exempt_exits_2(tmp_path, monkeypatch):
+    """If every common point falls under the noise floor nothing was
+    actually gated — that must read as misconfiguration, not a pass."""
+    base = _fastpath_json(tmp_path, "base.json", {"a": 0.001, "b": 0.002})
+    fresh = _fastpath_json(tmp_path, "fresh.json", {"a": 0.001, "b": 0.002})
+    with pytest.raises(SystemExit) as e:
+        _run_gate(monkeypatch, ["--fastpath-fresh", fresh,
+                                "--fastpath-baseline", base])
+    assert e.value.code == 2
+
+
+def test_disjoint_sections_exit_2(tmp_path, monkeypatch, capsys):
+    """Zero shared points (e.g. a renamed series) must never silently
+    pass."""
+    base = _fastpath_json(tmp_path, "base.json", {"old_name": 0.10})
+    fresh = _fastpath_json(tmp_path, "fresh.json", {"new_name": 0.10})
+    with pytest.raises(SystemExit) as e:
+        _run_gate(monkeypatch, ["--fastpath-fresh", fresh,
+                                "--fastpath-baseline", base])
+    assert e.value.code == 2
+    assert "no point is shared" in capsys.readouterr().err
+
+
+def test_no_fresh_input_exits_2(monkeypatch):
+    with pytest.raises(SystemExit) as e:
+        _run_gate(monkeypatch, [])
+    assert e.value.code == 2
+
+
+def test_both_sections_gate_together(tmp_path, monkeypatch, capsys):
+    """Planner and fastpath sections combine: a regression in either fails
+    the run even when the other is clean."""
+    pb = _planner_json(tmp_path, "pb.json", {("u", "mixed", 10_000): 0.10})
+    pf = _planner_json(tmp_path, "pf.json", {("u", "mixed", 10_000): 0.10})
+    fb = _fastpath_json(tmp_path, "fb.json", {"store_ab/device": 0.05})
+    ff = _fastpath_json(tmp_path, "ff.json", {"store_ab/device": 0.50})
+    with pytest.raises(SystemExit) as e:
+        _run_gate(monkeypatch, ["--fresh", pf, "--baseline", pb,
+                                "--fastpath-fresh", ff,
+                                "--fastpath-baseline", fb])
+    assert e.value.code == 1
+    err = capsys.readouterr().err
+    assert "1/2 gated points" in err

@@ -106,6 +106,23 @@ def test_columnar_pack_roundtrip_and_duplicate_reject():
     assert ks.slices[1].size == 16.0
 
 
+def test_columnar_store_rejects_non_monotonic_interval():
+    """The ring position is interval % (window+1): rewinding the clock
+    would silently alias a live column, so the store must refuse."""
+    spec = ColumnarSpec(mode="add", slot_bytes=4.0)
+    store = ColumnarStateStore(window=2, spec=spec)
+    keys = np.array([1, 2], dtype=np.int64)
+    store.update_slots(5, keys, np.ones(2))
+    store.update_slots(5, keys, np.ones(2))          # same interval: fine
+    store.end_interval_collect(5)                    # boundary at 5: fine
+    with pytest.raises(ValueError, match="non-monotonic"):
+        store.update_slots(4, keys, np.ones(2))
+    with pytest.raises(ValueError, match="non-monotonic"):
+        store.end_interval_collect(3)
+    store.update_slots(6, keys, np.ones(2))          # forward still works
+    assert sorted(store.keys) == [1, 2]
+
+
 def test_columnar_store_rejects_scalar_state_access():
     store = ColumnarStateStore(window=1, spec=ColumnarSpec())
     with pytest.raises(NotImplementedError, match="object backend"):
