@@ -1,6 +1,8 @@
 """Faithful stream-processing substrate: engine, operators, state, generator,
-and multi-stage topologies."""
+pluggable state backends, and multi-stage topologies."""
 
+from .backends import (BACKENDS, ColumnarBackend, DeviceBackend,
+                       ObjectBackend, StateBackend, register_backend)
 from .engine import STATE_BACKENDS, SUBSTRATES, IntervalReport, KeyedStage
 from .generator import WorkloadGen, zipf_frequencies
 from .operators import (BatchResult, Filter, IntervalBatchResult, MergeCounts,
@@ -17,13 +19,20 @@ __all__ = [
     "WindowedSelfJoin", "WordCount", "ColumnarSpec", "ColumnarStateStore",
     "KeyState", "TaskStateStore", "StageSpec", "Topology", "TopologyReport",
     "keyed_stage", "DeviceStateFleet", "DeviceTaskView",
+    "BACKENDS", "StateBackend", "ObjectBackend", "ColumnarBackend",
+    "DeviceBackend", "register_backend", "ShardedDeviceBackend",
+    "ShardedStateFleet",
 ]
 
 
 def __getattr__(name):
-    # The device backend imports jax at module scope; loading it lazily keeps
-    # `import repro.streams` jax-free for ModHash/object-backend users.
+    # The device/sharded backends import jax at module scope; loading them
+    # lazily keeps `import repro.streams` jax-free for ModHash/object-backend
+    # users.
     if name in ("DeviceStateFleet", "DeviceTaskView"):
         from . import device
         return getattr(device, name)
+    if name in ("ShardedDeviceBackend", "ShardedStateFleet"):
+        from . import sharded
+        return getattr(sharded, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -302,6 +302,14 @@ class DeviceStateFleet:
                                   interpret=interpret)
         return _route_dense(self._all_keys, tk, td, n_dest=n_dest, seed=seed)
 
+    def dest_host_dense(self, dev) -> np.ndarray:
+        """Host copy of a ``route_dense`` table, aligned to key id.
+
+        Returns ``(domain+1,)`` int64 with ``out[k] == F(k)``. The single-
+        device layout already is key-aligned; sharded fleets override this to
+        de-interleave their per-shard blocks."""
+        return np.asarray(dev).astype(np.int64)
+
     # -- host snapshots (pack contract + introspection) -------------------------
     def host_state(self) -> Tuple[np.ndarray, np.ndarray]:
         if self._host_dirty:

@@ -15,18 +15,20 @@ interval makespan = max per-task cost + migration stall, so throughput =
 tuples / makespan (relative units; the paper measures the same shape of
 quantity on Storm).
 
-Vectorized fast path (default)
-------------------------------
-``KeyedStage(vectorized=True)`` dispatches whole micro-batches at a time:
-one ``Assignment.dest`` call per interval, argsort + segment boundaries to
-partition tuples per task, ``Operator.process_batch`` per segment, and
-``np.add.at`` segment-sums for the per-key cost/freq/state-size stats of
-protocol step 1 (see :mod:`repro.streams.operators` for the batched operator
-contract and :mod:`repro.streams.state` for the batched store API).
-``vectorized=False`` keeps the original per-tuple loop as the reference
-implementation; ``tests/test_engine_parity.py`` proves the two produce
-identical :class:`IntervalReport` streams, and
-``benchmarks/engine_fastpath.py`` measures the speedup.
+Router + controller shell over pluggable state backends
+-------------------------------------------------------
+:class:`KeyedStage` itself only owns what is backend-independent: routing
+(``_dest_batch``, numpy or the Pallas kernel), the controller handoff and
+report assembly (``_finish_interval``), the pause-window clock, elastic
+scaling, and the per-tuple reference loop (``vectorized=False``) that serves
+as the parity oracle. Everything state-shaped — store layout, interval
+execution, migration, step-1 stats — lives behind the
+:class:`~repro.streams.backends.StateBackend` protocol; see
+:mod:`repro.streams.backends` for the object/columnar/device backends and
+:mod:`repro.streams.sharded` for the multi-device mesh backend.
+``tests/test_engine_parity.py`` proves the vectorized backends produce
+:class:`IntervalReport` streams identical to the reference loop, and
+``benchmarks/engine_fastpath.py`` measures the speedups.
 
 Multi-stage topologies chain stages through
 :meth:`KeyedStage.process_interval_emits`, which additionally returns the
@@ -59,11 +61,11 @@ import numpy as np
 from repro.core.balancer import Assignment, KeyStats, metrics
 from repro.core.controller import RebalanceController
 
+from .backends import resolve_backend
 from .operators import Operator
-from .state import ColumnarStateStore, TaskStateStore
 
 SUBSTRATES = ("numpy", "pallas")
-STATE_BACKENDS = ("auto", "columnar", "object", "device")
+STATE_BACKENDS = ("auto", "columnar", "object", "device", "sharded")
 
 
 @dataclasses.dataclass
@@ -90,23 +92,29 @@ class KeyedStage:
         selects the per-tuple reference loop — same results, ~10x slower;
         kept for parity testing and as executable documentation.
       substrate: ``"numpy"`` or ``"pallas"`` — see the module docstring.
-      state_backend: ``"auto"`` (default) picks the columnar store when the
-        operator declares a ``columnar_spec`` and the stage is vectorized —
-        state then lives in flat per-task arrays and each macro-batch is ONE
-        whole-interval operator dispatch (``Operator.process_interval_batch``)
-        instead of a per-task Python loop. ``"object"`` forces the dict-of-
-        KeyState store (the compatibility/parity backend, and the only one
-        custom per-tuple operators can use); ``"columnar"`` forces the array
-        store and raises if the operator cannot support it. ``"device"``
-        keeps state as device-resident arrays and fuses the whole interval
-        into one jitted step (see :mod:`repro.streams.device`); it requires
-        vectorized=True, a Hash32 router and an operator with device closed
-        forms (``device_mode``) — ``"auto"`` picks it only when those hold
+      state_backend: which :class:`~repro.streams.backends.StateBackend`
+        holds the keyed state. ``"auto"`` (default) resolves device >
+        columnar > object: the columnar store when the operator declares a
+        ``columnar_spec`` and the stage is vectorized — state then lives in
+        flat per-task arrays and each macro-batch is ONE whole-interval
+        operator dispatch — promoted to ``"device"`` only when the operator
+        also has device closed forms (``device_mode``), the router is Hash32
         AND jax runs on an accelerator backend (on CPU the columnar store
-        wins, so auto behavior there is unchanged).
-      device_domain_max: the device backend allocates dense state per key id;
-        ids at or above this bound raise instead of silently exploding
-        memory (sparse huge domains belong on the columnar backend).
+        wins, so auto behavior there is unchanged). ``"object"`` forces the
+        dict-of-KeyState store (the compatibility/parity backend, and the
+        only one custom per-tuple operators can use); ``"columnar"`` forces
+        the array store; ``"device"`` keeps state as device-resident arrays
+        and fuses the whole interval into one jitted step (see
+        :mod:`repro.streams.device`); ``"sharded"`` shards that same dense
+        ring across a JAX mesh of ``n_shards`` devices (explicit-only; see
+        :mod:`repro.streams.sharded`). Forced backends raise ``ValueError``
+        when the operator/router cannot support them.
+      n_shards: device count for ``state_backend="sharded"`` (default: every
+        local jax device). Ignored by the other backends.
+      device_domain_max: the device/sharded backends allocate dense state per
+        key id; ids at or above this bound raise instead of silently
+        exploding memory (sparse huge domains belong on the columnar
+        backend).
       kernel_interpret: Pallas ``interpret=`` mode for the routing/stats
         kernels. ``None`` (default) auto-selects: compiled on real TPU
         backends, interpret elsewhere (CPU has no Mosaic lowering).
@@ -120,51 +128,18 @@ class KeyedStage:
                  micro_batches: int = 8, migration_batches: int = 2,
                  vectorized: bool = True, substrate: str = "numpy",
                  state_backend: str = "auto",
+                 n_shards: Optional[int] = None,
                  kernel_interpret: Optional[bool] = None,
                  stats_dense_max: int = 1 << 20,
                  device_domain_max: int = 1 << 22):
         if substrate not in SUBSTRATES:
             raise ValueError(f"unknown substrate {substrate!r}; "
                              f"choose from {SUBSTRATES}")
-        if state_backend not in STATE_BACKENDS:
-            raise ValueError(f"unknown state backend {state_backend!r}; "
-                             f"choose from {STATE_BACKENDS}")
         self.operator = operator
         self.controller = controller
         self.window = window
         self.n_tasks = controller.assignment.n_dest
-        spec = getattr(operator, "columnar_spec", None)
-        dev_mode = getattr(operator, "device_mode", None)
-        self._device = False
-        if state_backend == "device":
-            self._check_device_support(operator, vectorized, spec, dev_mode)
-            self._device = True
-            self._columnar = False
-        elif state_backend == "columnar":
-            if spec is None:
-                raise ValueError(
-                    f"state_backend='columnar' requires an operator with a "
-                    f"columnar_spec; {type(operator).__name__} has none "
-                    "(custom per-tuple operators need the object store)")
-            if not vectorized:
-                raise ValueError("state_backend='columnar' requires "
-                                 "vectorized=True (the per-tuple reference "
-                                 "path uses scalar state access)")
-            self._columnar = True
-        else:
-            self._columnar = (state_backend == "auto" and vectorized
-                              and spec is not None)
-            # auto-promote to the device backend only when every device
-            # requirement already holds AND jax runs on an accelerator —
-            # checked lazily so ModHash/object stages never import jax
-            if self._columnar and dev_mode is not None \
-                    and self._is_hash32_router():
-                import jax                       # lazy
-                if jax.default_backend() != "cpu":
-                    self._device = True
-                    self._columnar = False
-        self.state_backend = ("device" if self._device
-                              else "columnar" if self._columnar else "object")
+        self.n_shards = n_shards
         self.device_domain_max = device_domain_max
         self.migration_bandwidth = migration_bandwidth
         self.micro_batches = micro_batches
@@ -184,55 +159,16 @@ class KeyedStage:
         self._table_capacity = 0      # pallas routing-table pad, high-water mark
         self._route_cache = None      # (cache key, device tk, device td)
         self._kernel_interpret = kernel_interpret
+        # backend selection (and its support errors) precedes substrate init
+        backend_cls = resolve_backend(state_backend, operator, controller,
+                                      vectorized)
         if substrate == "pallas":
             self._init_pallas(kernel_interpret)
-        if self._device:
-            self._init_device()
-        self.stores = [self._new_store() for _ in range(self.n_tasks)]
+        self.backend = backend_cls(self)
+        self.state_backend = self.backend.name
+        self.stores = [self.backend.new_store() for _ in range(self.n_tasks)]
         # wire the migration executor (paper steps 5-6)
-        self.controller.executor = (self._migrate_device if self._device
-                                    else self._migrate)
-
-    def _is_hash32_router(self) -> bool:
-        from repro.core.balancer.hashing import Hash32
-        return isinstance(self.controller.assignment.hash_router, Hash32)
-
-    def _check_device_support(self, operator, vectorized, spec,
-                              dev_mode) -> None:
-        if not vectorized:
-            raise ValueError("state_backend='device' requires "
-                             "vectorized=True (the per-tuple reference path "
-                             "uses scalar state access)")
-        if dev_mode is None or spec is None:
-            raise ValueError(
-                f"state_backend='device' requires an operator with device "
-                f"closed forms (device_mode + columnar_spec); "
-                f"{type(operator).__name__} has none — such operators fall "
-                "back to the columnar/object store under 'auto'")
-        if not self._is_hash32_router():
-            router = self.controller.assignment.hash_router
-            raise ValueError(
-                "state_backend='device' requires a Hash32 router (device-"
-                f"canonical fmix32); got {type(router).__name__}. ModHash's "
-                "splitmix64 has no 32-bit device equivalent.")
-
-    def _init_device(self) -> None:
-        from .device import DeviceStateFleet
-        self._device_seed = self.controller.assignment.hash_router.seed
-        self._fleet = DeviceStateFleet(self.window, self.operator.columnar_spec)
-        self._dest_dense_cache = None   # (cache key, device dests, host dests)
-        self._views_made = 0
-
-    def _new_store(self):
-        if self._device:
-            from .device import DeviceTaskView
-            idx = (len(self.stores) if hasattr(self, "stores")
-                   else self._views_made)
-            self._views_made += 1
-            return DeviceTaskView(self._fleet, idx)
-        if self._columnar:
-            return ColumnarStateStore(self.window, self.operator.columnar_spec)
-        return TaskStateStore(self.window)
+        self.controller.executor = self._execute_migration
 
     def _init_pallas(self, kernel_interpret: Optional[bool]) -> None:
         from repro.core.balancer.hashing import Hash32
@@ -255,239 +191,35 @@ class KeyedStage:
             kernel_interpret = jax.default_backend() != "tpu"
         self._kernel_interpret = bool(kernel_interpret)
 
-    # -- state migration: move keyed state between stores ----------------------
-    def _migrate(self, moved_keys: np.ndarray, old: Assignment,
-                 new: Assignment) -> None:
-        """Executor for protocol steps 5-6, array-at-a-time and backend-
-        agnostic: one dest() call per assignment, group-by-source extraction
-        into packs, mask-split per destination, group installs. On the
-        columnar backend a pack is a row slice of flat arrays; on the object
-        backend it is the keys plus their KeyState objects — either way no
-        per-key dict is built here."""
-        keys = np.asarray(moved_keys, dtype=np.int64)
-        src = old.dest(keys)
-        dst = new.dest(keys)
-        moving = src != dst
-        mkeys, msrc = keys[moving], src[moving]
-        total = 0.0
-        installs = []
-        for s in np.unique(msrc):
-            pack = self.stores[int(s)].extract_batch(mkeys[msrc == s])
-            if not pack.keys.size:
-                continue
-            total += pack.nbytes
-            pdst = new.dest(pack.keys)
-            for d in np.unique(pdst):
-                installs.append((int(d), pack.take(pdst == d)))
-        for d, pack in installs:
-            self.stores[d].install_batch(pack)
-        self._migrated_bytes_pending += total
-        # the reference loop materializes the membership set lazily; the
-        # vectorized path only ever consults the array (np.isin)
-        self._pending_delta = None
-        self._pending_delta_arr = keys
-
-    def _migrate_device(self, moved_keys: np.ndarray, old: Assignment,
-                        new: Assignment) -> None:
-        """Device-backend migration executor: zero device work.
-
-        State is key-indexed on the device, so moving a key between tasks
-        only relabels host ownership; migrated bytes come from the ``mem``
-        mirror's closed-form S(k, w) — the exact per-pack sums the columnar
-        executor reports, because every quantity is an integer-valued
-        float64 (order-free exact summation)."""
-        keys = np.asarray(moved_keys, dtype=np.int64)
-        src = old.dest(keys)
-        dst = new.dest(keys)
-        moving = src != dst
-        mkeys = keys[moving]
-        fleet = self._fleet
-        if mkeys.size and fleet.domain:
-            ok = (mkeys >= 0) & (mkeys < fleet.domain)
-            mk = mkeys[ok]
-            held = fleet.task[mk] >= 0
-            hk = mk[held]
-            self._migrated_bytes_pending += float(fleet.mem[hk].sum())
-            fleet.task[hk] = dst[moving][ok][held].astype(np.int32)
-        self._pending_delta = None
-        self._pending_delta_arr = keys
-
-    # -- device fast path (state_backend="device") ------------------------------
-    def _dest_dense_arrays(self):
-        """Dense F(k) table over every key id, refreshed once per
-        ``assignment_version`` (and per domain growth) — the device twin of
-        ``_dest_batch``'s routing-table cache, sharing its power-of-two
-        high-water table capacity so table churn never retraces."""
-        assignment = self.controller.assignment
-        needed = max(128, 1 << max(0, assignment.table_size - 1).bit_length())
-        if needed > self._table_capacity:
-            self._table_capacity = needed
-        cache_key = (self.controller.assignment_version,
-                     assignment.table_size, self._table_capacity,
-                     self._fleet.domain, self.n_tasks)
-        if self._dest_dense_cache is None \
-                or self._dest_dense_cache[0] != cache_key:
-            tk, td = assignment.table_arrays(self._table_capacity)
-            dev = self._fleet.route_dense(
-                tk, td, assignment.n_dest, seed=self._device_seed,
-                use_kernel=(self.substrate == "pallas"),
-                interpret=self._kernel_interpret)
-            self._dest_dense_cache = (cache_key, dev,
-                                      np.asarray(dev).astype(np.int64))
-        return self._dest_dense_cache[1], self._dest_dense_cache[2]
-
-    def _process_interval_device(self, keys: np.ndarray,
-                                 values: Optional[Sequence[Any]] = None,
-                                 collect_emits: bool = False):
-        """One interval as ONE fused device step (see streams/device.py).
-
-        The pause-window macro-batch split of the vectorized path telescopes
-        for device operators (their closed forms are batch-boundary
-        invariant), so only the ``buffered`` count needs the host split; the
-        step itself sees the whole interval."""
+    # -- pause-window clock (protocol steps 4/7) --------------------------------
+    def begin_interval(self) -> int:
         self._interval += 1
-        iv = self._interval
-        n = int(keys.shape[0])
-        fleet = self._fleet
-        op = self.operator
-        spec = op.columnar_spec
+        return self._interval
 
-        buffered_count = 0
-        if n and self._pending_delta_arr is not None:
-            edges = np.linspace(0, n, self.micro_batches + 1).astype(int)
-            pause_hi = edges[min(self.migration_batches, self.micro_batches)]
-            buffered_count = int(np.isin(keys[:pause_hi],
-                                         self._pending_delta_arr).sum())
+    def pause_window(self, n: int) -> Optional[int]:
+        """Index bound of the pause window, or None when no migration is in
+        flight: the first ``migration_batches`` of ``micro_batches`` slices
+        buffer Delta-keys while migration completes."""
+        if not n or self._pending_delta_arr is None:
+            return None
+        edges = np.linspace(0, n, self.micro_batches + 1).astype(int)
+        return int(edges[min(self.migration_batches, self.micro_batches)])
+
+    def clear_pause(self) -> None:
         self._pending_delta = None
         self._pending_delta_arr = None
 
-        # ring-column bookkeeping (host mirror of the columnar _col_iv)
-        w1 = self.window + 1
-        c = iv % w1
-        col_iv = fleet.col_iv
-        if n:
-            if col_iv[c] not in (-1, iv):
-                raise RuntimeError(
-                    f"device ring column clock skew: column {c} still holds "
-                    f"interval {int(col_iv[c])} at interval {iv}")
-            col_iv[c] = iv
-        cutoff = iv - self.window + 1
-        expire = (col_iv >= 0) & (col_iv < cutoff)
-        keep = (~expire).astype(np.int32)
-        col_iv[expire] = -1
-
-        task_cost = np.zeros(self.n_tasks)
-        stats: Optional[KeyStats] = None
-        win0_h = slot0_h = None
-
-        if n:
-            kmin, kmax = int(keys.min()), int(keys.max())
-            if kmin < 0:
-                raise ValueError(
-                    f"state_backend='device' requires non-negative key ids; "
-                    f"got {kmin}")
-            if kmax >= self.device_domain_max:
-                raise ValueError(
-                    f"key id {kmax} exceeds device_domain_max="
-                    f"{self.device_domain_max}: the dense device backend "
-                    "allocates state per key id — raise device_domain_max or "
-                    "use the columnar backend for sparse huge domains")
-            fleet.ensure_domain(kmax + 1)
-            dest_dev, dest_host = self._dest_dense_arrays()
-            cur = np.zeros(w1, dtype=np.int32)
-            cur[c] = 1
-            tv = None
-            if op.device_mode == "max":
-                tv64 = np.asarray(values).astype(np.int64)
-                if tv64.size and not (
-                        int(tv64.min()) > np.iinfo(np.int32).min
-                        and int(tv64.max()) <= np.iinfo(np.int32).max):
-                    raise ValueError(
-                        "state_backend='device' folds values in int32; "
-                        "tuple value out of int32 range")
-                tv = tv64
-            step = fleet.interval_step(keys, tv, dest_dev, self.n_tasks,
-                                       keep, cur, op.device_mode)
-            dom = fleet.domain
-            counts_h = np.asarray(step[0])[:dom]
-            win0_h = np.asarray(step[1])[:dom]
-            slot0_h = np.asarray(step[2])[:dom]
-            held_cnt = np.asarray(step[3])[:dom]
-            held_sum = np.asarray(step[4])[:dom]
-
-            seen_mask = counts_h > 0
-            gk = np.nonzero(seen_mask)[0].astype(np.int64)
-            key_cost_g, out_vals, emit_sum = op.device_finish(
-                counts_h[seen_mask].astype(np.int64),
-                win0_h[seen_mask].astype(np.int64),
-                slot0_h[seen_mask].astype(np.int64))
-            if out_vals is not None:
-                self.outputs.update(zip(gk.tolist(), out_vals.tolist()))
-            self.emitted_sum += emit_sum
-            if op.device_unit_cost:
-                if step[5] is not None:           # max mode: device bincount
-                    task_cost = np.asarray(step[5]).astype(np.float64)
-                else:                             # add mode: counts are host
-                    task_cost = np.bincount(dest_host[:dom],
-                                            weights=counts_h,
-                                            minlength=self.n_tasks)
-            else:
-                task_cost = np.bincount(dest_host[gk], weights=key_cost_g,
-                                        minlength=self.n_tasks)
-
-            # host mirrors: ownership labels (new keys adopt F(k); evicted
-            # keys clear) and the closed-form S(k, w) per key
-            alive = held_cnt > 0
-            t = fleet.task
-            t[:dom] = np.where(alive,
-                               np.where(t[:dom] >= 0, t[:dom],
-                                        dest_host[:dom].astype(np.int32)),
-                               -1)
-            fleet.mem[:dom] = (spec.slot_bytes * held_cnt
-                               + spec.bytes_per_unit * held_sum)
-            fleet.mem[:dom][~alive] = 0.0
-
-            # stat universe = seen ∪ held == alive: a seen key's current slot
-            # never expires at its own boundary, so seen ⊆ held-after
-            uni = np.nonzero(alive)[0].astype(np.int64)
-            if uni.size:
-                cost = np.zeros(uni.size, dtype=np.float64)
-                cost[np.searchsorted(uni, gk)] = key_cost_g
-                stats = KeyStats(keys=uni,
-                                 cost=cost,
-                                 mem=fleet.mem[uni].copy(),
-                                 freq=counts_h[alive].astype(np.float64))
-        else:
-            if fleet.domain and expire.any():
-                held_cnt, held_sum = fleet.evict(keep)
-                dom = fleet.domain
-                alive = held_cnt[:dom] > 0
-                fleet.task[:dom] = np.where(alive, fleet.task[:dom], -1)
-                fleet.mem[:dom] = (spec.slot_bytes * held_cnt[:dom]
-                                   + spec.bytes_per_unit * held_sum[:dom])
-                fleet.mem[:dom][~alive] = 0.0
-            if fleet.domain:
-                uni = np.nonzero(fleet.task[:fleet.domain] >= 0)[0] \
-                    .astype(np.int64)
-                if uni.size:
-                    stats = KeyStats(keys=uni,
-                                     cost=np.zeros(uni.size),
-                                     mem=fleet.mem[uni].copy(),
-                                     freq=np.zeros(uni.size))
-
-        report = self._finish_interval(iv, n, task_cost, buffered_count, stats)
-        if not collect_emits:
-            return report
-        if n == 0:
-            return report, np.zeros(0, np.int64), np.zeros(0, np.float64)
-        _, inv, ucounts = np.unique(keys, return_inverse=True,
-                                    return_counts=True)
-        from .operators import _occurrence_index
-        occ = _occurrence_index(inv, ucounts)
-        evals = op.device_emit_values(keys, occ, win0_h, slot0_h)
-        if evals is None:
-            return report, np.zeros(0, np.int64), np.zeros(0, np.float64)
-        return report, keys.astype(np.int64, copy=False), evals
+    # -- migration executor (paper steps 5-6) -----------------------------------
+    def _execute_migration(self, moved_keys: np.ndarray, old: Assignment,
+                           new: Assignment) -> None:
+        """Controller-invoked: the backend moves the state, the stage books
+        the stall and opens the pause window for Delta(F, F')."""
+        keys = np.asarray(moved_keys, dtype=np.int64)
+        self._migrated_bytes_pending += self.backend.migrate(keys, old, new)
+        # the reference loop materializes the membership set lazily; the
+        # vectorized backends only ever consult the array (np.isin)
+        self._pending_delta = None
+        self._pending_delta_arr = keys
 
     # -- one interval of traffic ------------------------------------------------
     def process_interval(self, tuples: Sequence[Tuple[int, Any]]) -> IntervalReport:
@@ -505,9 +237,7 @@ class KeyedStage:
         False). This is the zero-conversion path used by the benchmarks."""
         if not self.vectorized:
             return self._process_interval_reference(keys, values)
-        if self._device:
-            return self._process_interval_device(keys, values)
-        return self._process_interval_vectorized(keys, values)
+        return self.backend.process_interval(keys, values)
 
     def process_interval_emits(self, keys: np.ndarray,
                                values: Optional[Sequence[Any]] = None
@@ -518,7 +248,7 @@ class KeyedStage:
         Returns ``(report, emit_keys, emit_values)``. Emits are ordered by
         source-tuple position (the fan-out emits of one tuple stay adjacent,
         in emit order) — per-key state only depends on that key's own tuple
-        order, which pause/replay preserves, so BOTH engine paths produce
+        order, which pause/replay preserves, so ALL engine paths produce
         this exact stream. That canonical order is what makes chained stages
         parity-testable; it is the stage-to-stage hand-off used by
         :class:`repro.streams.topology.Topology`.
@@ -526,157 +256,7 @@ class KeyedStage:
         if not self.vectorized:
             return self._process_interval_reference(keys, values,
                                                     collect_emits=True)
-        if self._device:
-            return self._process_interval_device(keys, values,
-                                                 collect_emits=True)
-        return self._process_interval_vectorized(keys, values,
-                                                 collect_emits=True)
-
-    def _process_interval_vectorized(self, keys: np.ndarray,
-                                     values: Optional[Sequence[Any]] = None,
-                                     collect_emits: bool = False):
-        self._interval += 1
-        iv = self._interval
-        n = int(keys.shape[0])
-        task_cost = np.zeros(self.n_tasks)
-        acc_keys: List[np.ndarray] = []
-        acc_cost: List[np.ndarray] = []
-        acc_freq: List[np.ndarray] = []
-        emit_acc: Optional[List[Tuple[np.ndarray, np.ndarray, np.ndarray]]] = \
-            [] if collect_emits else None
-        buffered_count = 0
-
-        dests = self._dest_batch(keys) if n else np.zeros(0, np.int64)
-
-        # Micro-batch boundaries are only *observable* through the pause
-        # window: the first `migration_batches` of `micro_batches` slices
-        # buffer Delta-keys while migration is in flight. Outside that
-        # window the batched operators are batch-boundary-invariant (their
-        # per-key closed forms telescope — see operators.py), so the engine
-        # coalesces the interval into at most two macro-dispatches:
-        #   A. the pause window, with Delta-keys masked out and buffered;
-        #   B. Resume — buffered tuples replayed (CURRENT assignment, which
-        #      equals `dests` since F only changes at interval boundaries)
-        #      followed by the rest of the stream.
-        if n and self._pending_delta_arr is not None:
-            edges = np.linspace(0, n, self.micro_batches + 1).astype(int)
-            pause_hi = edges[min(self.migration_batches, self.micro_batches)]
-            head = np.arange(pause_hi)
-            paused = np.isin(keys[:pause_hi], self._pending_delta_arr)
-            buffered_count = int(paused.sum())
-            kept = head[~paused]
-            if kept.size:
-                self._process_batch(iv, keys[kept], dests[kept], kept, values,
-                                    task_cost, acc_keys, acc_cost, acc_freq,
-                                    emit_acc)
-            resume = np.concatenate([head[paused], np.arange(pause_hi, n)])
-            if resume.size:
-                self._process_batch(iv, keys[resume], dests[resume], resume,
-                                    values, task_cost, acc_keys, acc_cost,
-                                    acc_freq, emit_acc)
-        elif n:
-            idx = np.arange(n)
-            self._process_batch(iv, keys, dests, idx, values, task_cost,
-                                acc_keys, acc_cost, acc_freq, emit_acc)
-        self._pending_delta = None
-        self._pending_delta_arr = None
-
-        held = [store.end_interval_collect(iv) for store in self.stores]
-
-        stats = self._collect_stats_vectorized(acc_keys, acc_cost, acc_freq,
-                                               held)
-        report = self._finish_interval(iv, n, task_cost, buffered_count, stats)
-        if not collect_emits:
-            return report
-        ekeys, evals = self._assemble_emits(emit_acc)
-        return report, ekeys, evals
-
-    @staticmethod
-    def _assemble_emits(emit_acc) -> Tuple[np.ndarray, np.ndarray]:
-        """Order accumulated (positions, keys, values) chunks into the
-        canonical source-position emit stream. Positions are unique per
-        source tuple across chunks, and one tuple's emits are contiguous
-        within a chunk, so a stable argsort reproduces stream order."""
-        if not emit_acc:
-            return np.zeros(0, np.int64), np.zeros(0, np.float64)
-        pos = np.concatenate([p for p, _, _ in emit_acc])
-        ekeys = np.concatenate([k for _, k, _ in emit_acc])
-        evals = np.concatenate([v for _, _, v in emit_acc])
-        order = np.argsort(pos, kind="stable")
-        return ekeys[order], evals[order]
-
-    def _process_batch(self, iv: int, bkeys: np.ndarray, bdests: np.ndarray,
-                       abs_idx: np.ndarray, values: Optional[Sequence[Any]],
-                       task_cost, acc_keys, acc_cost, acc_freq,
-                       emit_acc=None) -> None:
-        """Hand one macro-batch to the operator.
-
-        Columnar backend: ONE whole-interval dispatch — the operator lexsorts
-        on (dest, key) once, computes every segment's closed forms in a
-        single pass, and scatters per-task costs with one ``np.bincount``.
-        Object backend: partition per task via argsort + segment boundaries
-        and call the operator's batched kernel per segment (compatibility
-        path for custom operators; also the parity oracle)."""
-        if self._columnar:
-            op = self.operator
-            if not op.columnar_needs_values or values is None:
-                vals_b = None
-            elif isinstance(values, np.ndarray):
-                vals_b = values[abs_idx]
-            else:
-                vals_b = [values[i] for i in abs_idx.tolist()]
-            res, emits = op.process_interval_batch(
-                self.stores, iv, bkeys, bdests, self.n_tasks, vals_b,
-                collect_emits=emit_acc is not None)
-            task_cost += res.task_cost
-            acc_keys.append(res.uniq_keys)
-            acc_cost.append(res.key_cost)
-            acc_freq.append(res.key_freq)
-            for ok, ov in res.outputs:
-                self.outputs[ok] = ov
-            self.emitted_sum += res.emit_sum
-            if emit_acc is not None:
-                ecounts, ekeys, evals = emits
-                if ekeys.size:
-                    emit_acc.append((np.repeat(abs_idx, ecounts),
-                                     ekeys, evals))
-            return
-        order = np.argsort(bdests, kind="stable")
-        sorted_dests = bdests[order]
-        bounds = np.searchsorted(sorted_dests, np.arange(self.n_tasks + 1))
-        needs_values = self.operator.needs_values
-        values_arr = values if isinstance(values, np.ndarray) else None
-        for d in range(self.n_tasks):
-            s0, s1 = bounds[d], bounds[d + 1]
-            if s0 == s1:
-                continue
-            seg = order[s0:s1]
-            kseg = bkeys[seg]
-            vseg: Optional[Sequence[Any]] = None
-            if needs_values:
-                if values is None:
-                    # match the reference path: absent payloads flow as None
-                    vseg = [None] * len(seg)
-                elif values_arr is not None:
-                    vseg = values_arr[abs_idx[seg]]
-                else:
-                    vseg = [values[i] for i in abs_idx[seg]]
-            if emit_acc is None:
-                res = self.operator.process_batch(self.stores[d], iv, kseg,
-                                                  vseg)
-            else:
-                res, ecounts, ekeys, evals = self.operator.process_batch_emits(
-                    self.stores[d], iv, kseg, vseg)
-                if ekeys.size:
-                    emit_acc.append((np.repeat(abs_idx[seg], ecounts),
-                                     ekeys, evals))
-            task_cost[d] += res.task_cost
-            acc_keys.append(res.uniq_keys)
-            acc_cost.append(res.key_cost)
-            acc_freq.append(res.key_freq)
-            for ok, ov in res.outputs:
-                self.outputs[ok] = ov
-            self.emitted_sum += res.emit_sum
+        return self.backend.process_interval(keys, values, collect_emits=True)
 
     def _dest_batch(self, keys: np.ndarray) -> np.ndarray:
         """F(k) for a key batch — numpy Assignment.dest or the Pallas kernel."""
@@ -722,65 +302,6 @@ class KeyedStage:
             return np.asarray(out).astype(np.int64)
         return self.controller.assignment.dest(keys)
 
-    # -- stats collection (paper Fig. 5 step 1), segment-sum form --------------
-    def _collect_stats_vectorized(self, acc_keys, acc_cost, acc_freq,
-                                  held) -> Optional[KeyStats]:
-        # The stat universe is (keys seen this interval) UNION (keys still
-        # holding window state): omitting quiet stateful keys would let a
-        # table cleanup strand their state on the old task.
-        seen = (np.concatenate(acc_keys) if acc_keys
-                else np.zeros(0, np.int64))
-        cost_parts = (np.concatenate(acc_cost) if acc_cost
-                      else np.zeros(0, np.float64))
-        freq_parts = (np.concatenate(acc_freq) if acc_freq
-                      else np.zeros(0, np.float64))
-        held_keys = np.concatenate([h[0] for h in held]) if held else \
-            np.zeros(0, np.int64)
-        held_sizes = np.concatenate([h[1] for h in held]) if held else \
-            np.zeros(0, np.float64)
-        universe = np.union1d(seen, held_keys)
-        if not universe.size:
-            return None
-        if (self.substrate == "pallas" and seen.size
-                and int(universe.max()) < self.stats_dense_max
-                and int(universe.min()) >= 0):
-            return self._collect_stats_pallas(seen, cost_parts, freq_parts,
-                                              held_keys, held_sizes)
-        pos = np.searchsorted(universe, seen)
-        cost = metrics.segment_sum(cost_parts, pos, universe.size)
-        freq = metrics.segment_sum(freq_parts, pos, universe.size)
-        mem = metrics.segment_sum(held_sizes,
-                                  np.searchsorted(universe, held_keys),
-                                  universe.size)
-        return KeyStats(keys=universe, cost=cost, mem=mem, freq=freq)
-
-    def _collect_stats_pallas(self, seen, cost_parts, freq_parts, held_keys,
-                              held_sizes) -> KeyStats:
-        """Step-1 stats via the fused histogram kernel over a dense domain.
-
-        The kernel is a weighted segment-sum (one-hot matmul on the MXU), so
-        two passes — weights = per-key cost, weights = per-key freq — yield
-        c(k) and g(k). Accumulation is float32 on-device; reports therefore
-        match the numpy path to ~1e-6 relative, not bit-for-bit."""
-        jnp = self._jnp
-        num = int(max(seen.max(initial=0), held_keys.max(initial=0))) + 1
-        seen_dev = jnp.asarray(seen.astype(np.int32))
-        _, cost_d = self._kernel_stats(seen_dev, jnp.asarray(cost_parts), num,
-                                       interpret=self._kernel_interpret)
-        _, freq_d = self._kernel_stats(seen_dev, jnp.asarray(freq_parts), num,
-                                       interpret=self._kernel_interpret)
-        cost = np.asarray(cost_d, dtype=np.float64)
-        freq = np.asarray(freq_d, dtype=np.float64)
-        mem = metrics.segment_sum(held_sizes, held_keys, num)
-        # universe = seen ∪ held — held membership, not mem > 0: a quiet key
-        # whose window fully evicted still occupies the store and must stay
-        # visible to the balancer (same invariant as the numpy paths)
-        live = freq > 0
-        live[held_keys] = True
-        universe = np.nonzero(live)[0].astype(np.int64)
-        return KeyStats(keys=universe, cost=cost[live], mem=mem[live],
-                        freq=freq[live])
-
     def _finish_interval(self, iv: int, n: int, task_cost: np.ndarray,
                          buffered_count: int,
                          stats: Optional[KeyStats]) -> IntervalReport:
@@ -814,8 +335,7 @@ class KeyedStage:
     def _process_interval_reference(self, keys: np.ndarray,
                                     values: Optional[Sequence[Any]],
                                     collect_emits: bool = False):
-        self._interval += 1
-        iv = self._interval
+        iv = self.begin_interval()
         n = int(keys.shape[0])
         vals = values if values is not None else [None] * n
         if self._pending_delta is None and self._pending_delta_arr is not None:
@@ -843,8 +363,7 @@ class KeyedStage:
                     self._run_one(d, iv, k, v, pos, task_cost, key_cost,
                                   key_freq, emit_log)
                 buffer.clear()
-                self._pending_delta = None
-                self._pending_delta_arr = None
+                self.clear_pause()
             for i in range(lo, hi):
                 k, v = int(keys[i]), vals[i]
                 if migrating and k in self._pending_delta:
@@ -860,8 +379,7 @@ class KeyedStage:
                 self._run_one(d, iv, k, v, pos, task_cost, key_cost, key_freq,
                               emit_log)
             buffer.clear()
-        self._pending_delta = None
-        self._pending_delta_arr = None
+        self.clear_pause()
 
         for store in self.stores:
             store.end_interval(iv)
@@ -920,11 +438,11 @@ class KeyedStage:
         if self.last_stats is None:
             raise RuntimeError("scale_to requires at least one processed interval")
         while len(self.stores) < n_tasks:
-            self.stores.append(self._new_store())
+            self.stores.append(self.backend.new_store())
         self.controller.rescale(n_tasks, self.last_stats)
         # reconciliation sweep: the rescale executor only covers keys present
         # in the last interval's stats; stale-state keys re-hash too. Pack
-        # extraction + mask splits keep this array-native on both backends.
+        # extraction + mask splits keep this array-native on every backend.
         for s_idx, store in enumerate(self.stores):
             held, _ = store.sizes_arrays()
             if not held.size:

@@ -86,6 +86,7 @@ def keyed_stage(operator: Operator, n_tasks: int, theta_max: float, *,
                 table_max: int = 2_000, window: int = 2, seed: int = 0,
                 algorithm="mixed", hash_cls=ModHash, vectorized: bool = True,
                 substrate: str = "numpy", state_backend: str = "auto",
+                n_shards: Optional[int] = None,
                 kernel_interpret: Optional[bool] = None,
                 migration_bandwidth: float = 1e6) -> KeyedStage:
     """Convenience constructor: one stage = operator + fresh controller fleet.
@@ -107,7 +108,7 @@ def keyed_stage(operator: Operator, n_tasks: int, theta_max: float, *,
         algorithm=algorithm)
     return KeyedStage(operator, controller, window=window,
                       vectorized=vectorized, substrate=substrate,
-                      state_backend=state_backend,
+                      state_backend=state_backend, n_shards=n_shards,
                       kernel_interpret=kernel_interpret,
                       migration_bandwidth=migration_bandwidth)
 

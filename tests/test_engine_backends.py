@@ -1,0 +1,118 @@
+"""The StateBackend registry + the full ``state_backend="auto"`` matrix.
+
+PR 6 flipped ``auto`` to prefer the device backend when jax runs on an
+accelerator; the backend-protocol refactor moved that decision into
+``repro.streams.backends.resolve_backend``. This suite pins the whole
+selection matrix (operator capability x router x vectorized x jax
+backend) so future backends cannot silently shift existing stages, plus
+the registry surface itself (registration, lazy names, unknown-name
+errors). The accelerator rows monkeypatch ``jax.default_backend`` — the
+decision reads the backend name, not device properties, so the matrix is
+testable on CPU CI.
+
+See docs/architecture.md ("State backends") for the selection-rules table
+this suite executes.
+"""
+
+import pytest
+
+from repro.core import Assignment, BalanceConfig, ModHash, RebalanceController
+from repro.core.balancer.hashing import Hash32
+from repro.streams import KeyedStage, Operator, WordCount
+from repro.streams.backends import (BACKENDS, StateBackend, backend_names,
+                                    get_backend, register_backend,
+                                    resolve_backend)
+
+
+class CustomOp(Operator):
+    """No columnar_spec, no device_mode: object-store only."""
+
+    def process(self, store, interval, key, value):
+        return [], 1.0
+
+
+def _controller(hash_cls=Hash32, n_tasks=4):
+    return RebalanceController(Assignment(hash_cls(n_tasks, seed=0)),
+                               BalanceConfig())
+
+
+def _stage(op, *, hash_cls=Hash32, vectorized=True, backend="auto"):
+    return KeyedStage(op, _controller(hash_cls), vectorized=vectorized,
+                      state_backend=backend)
+
+
+# -- the auto-selection matrix -------------------------------------------------
+# rows: (operator capability, router, vectorized, jax backend) -> chosen
+
+def test_auto_matrix_on_cpu():
+    """On the CPU jax backend the device backend is never auto-picked (the
+    host columnar store wins there, measured in engine_fastpath.py)."""
+    assert _stage(WordCount()).state_backend == "columnar"
+    assert _stage(WordCount(), hash_cls=ModHash).state_backend == "columnar"
+    assert _stage(CustomOp()).state_backend == "object"
+    # the reference loop needs scalar state access: object, regardless of
+    # operator capability
+    assert _stage(WordCount(), vectorized=False).state_backend == "object"
+    assert _stage(CustomOp(), vectorized=False).state_backend == "object"
+
+
+def test_auto_matrix_on_accelerator(monkeypatch):
+    """On an accelerator backend auto promotes to device — exactly when the
+    operator has device closed forms AND the router is Hash32."""
+    import jax
+    monkeypatch.setattr(jax, "default_backend", lambda: "tpu")
+    # full device capability: promoted
+    assert _stage(WordCount()).state_backend == "device"
+    # ModHash has no device-canonical hash: stays columnar
+    assert _stage(WordCount(), hash_cls=ModHash).state_backend == "columnar"
+    # columnar-capable but no device closed forms: stays columnar
+    from repro.streams import Filter
+    assert _stage(Filter(lambda k, v: True)).state_backend == "columnar"
+    # per-tuple operators still land on object
+    assert _stage(CustomOp()).state_backend == "object"
+    # reference loop: never promoted
+    assert _stage(WordCount(), vectorized=False).state_backend == "object"
+    # sharded stays explicit-only even when every device requirement holds
+    assert _stage(WordCount()).state_backend != "sharded"
+
+
+def test_explicit_backend_requests_are_validated():
+    # forcing a backend the operator cannot support raises with the reason
+    with pytest.raises(ValueError, match="columnar_spec"):
+        _stage(CustomOp(), backend="columnar")
+    with pytest.raises(ValueError, match="device closed forms"):
+        _stage(CustomOp(), backend="device")
+    # forcing object always works (the compatibility backend)
+    assert _stage(WordCount(), backend="object").state_backend == "object"
+
+
+# -- registry surface ----------------------------------------------------------
+
+def test_registry_names_and_unknown_backend():
+    assert {"object", "columnar", "device"} <= set(BACKENDS)
+    # lazy backends are selectable without having been imported
+    assert set(backend_names()) >= {"auto", "object", "columnar", "device",
+                                    "sharded"}
+    with pytest.raises(ValueError, match="unknown state backend"):
+        get_backend("bogus")
+    with pytest.raises(ValueError, match="unknown state backend"):
+        KeyedStage(WordCount(), _controller(), state_backend="bogus")
+
+
+def test_register_backend_round_trip():
+    class NullBackend(StateBackend):
+        name = "null-test"
+
+    try:
+        register_backend(NullBackend)
+        assert get_backend("null-test") is NullBackend
+        assert resolve_backend("null-test", WordCount(), _controller(),
+                               True) is NullBackend
+        # auto never considers backends that do not opt in
+        assert resolve_backend("auto", WordCount(), _controller(),
+                               True).name == "columnar"
+    finally:
+        BACKENDS.pop("null-test", None)
+    # nameless classes are rejected outright
+    with pytest.raises(ValueError, match="name"):
+        register_backend(StateBackend)
