@@ -13,6 +13,15 @@ swing on the same machine):
   (the per-tuple/vectorized dispatch A/B and the object/columnar
   store-backend A/B).
 
+A third section gates *values*, not wall time: **strategy matrix**
+(``--matrix-fresh`` / ``--matrix-baseline``) compares the ``mixed``-planner
+rows of ``strategy_matrix.py`` (imbalance theta, migrated bytes, table
+size, model throughput — all deterministic model units given the seed)
+against the committed ``benchmarks/strategy_matrix.json`` within
+``--matrix-rtol`` relative tolerance. A drift here means the planner's
+*behavior* changed (plans, migration volume, balance quality), which wall
+clocks cannot see.
+
 The committed planner baseline (``benchmarks/planner_scaling.json``) is
 generated with a K sweep that is a superset of the CI smoke sweep
 (``--ks 5000,10000,30000,100000``), so the per-PR ``--smoke`` run always
@@ -55,6 +64,39 @@ def _index_planner(series):
 
 def _index_fastpath(series):
     return {(s["name"],): s["seconds"] for s in series}
+
+#: strategy-matrix metrics gated by value (wall_s is machine noise; these
+#: are deterministic functions of the seeded workload + planner behavior)
+MATRIX_METRICS = ("theta_mean", "migrated_bytes", "table_size", "throughput")
+
+
+def _index_matrix(rows, strategy="mixed"):
+    return {(r["shape"], r["strategy"], m): float(r[m])
+            for r in rows if r["strategy"] == strategy
+            for m in MATRIX_METRICS}
+
+
+def _gate_matrix(fresh, base, rtol):
+    """Value-tolerance comparison of the mixed-planner matrix rows; returns
+    (violations, gated). Exits 2 on zero common points like _gate_section."""
+    common = sorted(set(fresh) & set(base))
+    if not common:
+        print("perf gate misconfigured [strategy_matrix]: no point is "
+              "shared between fresh and baseline JSON", file=sys.stderr)
+        sys.exit(2)
+    width = max(len(" ".join(str(p) for p in key)) for key in common)
+    print("[strategy_matrix]")
+    print(f"{'point':>{width}} {'base':>12} {'fresh':>12} {'rel_err':>8}")
+    violations = []
+    for key in common:
+        b, fr = base[key], fresh[key]
+        rel = abs(fr - b) / max(abs(b), 1e-12)
+        flag = "  <-- DRIFT" if rel > rtol else ""
+        name = " ".join(str(p) for p in key)
+        print(f"{name:>{width}} {b:>12.4f} {fr:>12.4f} {rel:>8.4f}{flag}")
+        if rel > rtol:
+            violations.append((("strategy_matrix",) + key, rel))
+    return violations, len(common)
 
 
 def _gate_section(label, fresh, base, max_ratio, min_baseline_s):
@@ -103,6 +145,16 @@ def main() -> None:
     ap.add_argument("--fastpath-baseline",
                     default="benchmarks/engine_fastpath.json",
                     help="committed engine_fastpath baseline JSON")
+    ap.add_argument("--matrix-fresh", default=None,
+                    help="JSON from the just-run strategy_matrix sweep")
+    ap.add_argument("--matrix-baseline",
+                    default="benchmarks/strategy_matrix.json",
+                    help="committed strategy_matrix baseline JSON")
+    ap.add_argument("--matrix-rtol", type=float, default=0.25,
+                    help="relative tolerance for mixed-planner matrix "
+                         "metrics (loose enough for cross-version numpy "
+                         "rng stream drift, tight enough to catch the "
+                         "planner losing balance or migration discipline)")
     ap.add_argument("--max-ratio", type=float, default=2.0,
                     help="fail when fresh/baseline wall time exceeds this")
     ap.add_argument("--min-baseline-s", type=float, default=0.015,
@@ -112,9 +164,10 @@ def main() -> None:
                          "machine)")
     args = ap.parse_args()
 
-    if args.fresh is None and args.fastpath_fresh is None:
-        print("perf gate misconfigured: pass --fresh and/or "
-              "--fastpath-fresh", file=sys.stderr)
+    if (args.fresh is None and args.fastpath_fresh is None
+            and args.matrix_fresh is None):
+        print("perf gate misconfigured: pass --fresh, --fastpath-fresh "
+              "and/or --matrix-fresh", file=sys.stderr)
         sys.exit(2)
 
     violations = []
@@ -135,6 +188,14 @@ def main() -> None:
             base = _index_fastpath(json.load(f)["series"])
         v, g = _gate_section("engine_fastpath", fresh, base, args.max_ratio,
                              args.min_baseline_s)
+        violations += v
+        gated += g
+    if args.matrix_fresh is not None:
+        with open(args.matrix_fresh) as f:
+            fresh = _index_matrix(json.load(f)["rows"])
+        with open(args.matrix_baseline) as f:
+            base = _index_matrix(json.load(f)["rows"])
+        v, g = _gate_matrix(fresh, base, args.matrix_rtol)
         violations += v
         gated += g
 

@@ -15,8 +15,13 @@ MODULES = [
     "fig14_realdata", "fig15_scaleout", "fig16_tpch", "fig17_table_size",
     "fig18_table_growth", "fig19_window", "fig20_beta",
     "moe_skewshield", "kernels_bench", "engine_fastpath", "planner_scaling",
-    "topology_pipeline",
+    "topology_pipeline", "strategy_matrix",
 ]
+
+#: the per-PR CI subset (--smoke): one representative module per subsystem —
+#: single-stage engine figure, multi-stage topology, and the cross-strategy
+#: matrix (which also asserts mixed/reference and pkg/potc parity per shape)
+SMOKE_MODULES = ["fig16_tpch", "topology_pipeline", "strategy_matrix"]
 
 
 def main() -> None:
@@ -24,8 +29,14 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma-separated module filter")
+    ap.add_argument("--smoke", action="store_true",
+                    help="per-PR CI subset (quick mode, one module per "
+                         "subsystem); mutually exclusive with --only")
     args = ap.parse_args()
-    mods = MODULES if not args.only else [
+    if args.smoke and args.only:
+        print("# pass either --smoke or --only, not both", file=sys.stderr)
+        sys.exit(2)
+    mods = SMOKE_MODULES if args.smoke else MODULES if not args.only else [
         m for m in MODULES if any(o in m for o in args.only.split(","))]
     if args.only and not mods:
         print(f"# no module matches --only={args.only}", file=sys.stderr)

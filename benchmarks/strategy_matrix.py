@@ -1,0 +1,179 @@
+"""Strategy x workload-shape comparison matrix (the scenario sweep).
+
+One benchmark answering the paper's headline claim quantitatively: every
+registered partitioning strategy — the paper's table planners (mixed,
+mintable, minmig, readj) AND the competing choice routers (pkg, potc,
+wchoices) — driven over the same workload shapes from the existing
+generator (zipf exponent, drift rate, key-domain size, window length,
+fluctuation bursts), emitting one matrix of
+
+    imbalance theta (mean over steady-state intervals), migrated bytes,
+    routing-table size, model throughput (tuples / sum(makespan + stall))
+
+per (shape, strategy) point. Every strategy processes the *identical*
+pre-generated tuple stream (fluctuation is driven against a fixed probe
+assignment, not any stage's own), so the matrix is a controlled comparison
+and the model metrics are fully deterministic given the seed.
+
+Per-point parity is asserted where strategies are bit-comparable:
+
+* ``mixed`` vs the scalar ``mixed_reference`` oracle — identical reports;
+* ``pkg`` vs ``potc`` with ``n_sources=1`` — identical reports (the PoTC
+  policy with one source IS PKG).
+
+CI gates the ``mixed`` rows of a fresh quick run against the committed
+``benchmarks/strategy_matrix.json`` via ``check_perf_gate.py
+--matrix-fresh/--matrix-baseline`` (value tolerance, not wall time).
+
+    PYTHONPATH=src:. python benchmarks/strategy_matrix.py --out strategy_matrix.json --csv strategy_matrix.csv
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.core.balancer import Assignment, ModHash, PowerOfBothChoices
+from repro.streams import PartialWordCount, WorkloadGen, keyed_stage
+
+N_TASKS = 8
+THETA_MAX = 0.08
+
+#: every shape varies ONE generator knob off the base zipf profile
+SHAPES = [
+    # name, dict(k, z, f, window), per-interval fluctuation override list
+    ("uniform", dict(k=2_000, z=0.3, f=0.8, window=2), None),
+    ("zipf", dict(k=2_000, z=1.1, f=0.8, window=2), None),
+    ("hot", dict(k=2_000, z=2.0, f=0.8, window=2), None),
+    ("drift", dict(k=2_000, z=1.1, f=2.5, window=2), None),
+    # fluctuation bursts: calm intervals punctuated by violent swaps
+    ("burst", dict(k=2_000, z=1.1, f=0.0, window=2), [0.0, 4.0, 0.0, 4.0,
+                                                      0.0, 4.0, 0.0, 4.0]),
+    ("widekeys", dict(k=20_000, z=1.1, f=0.8, window=2), None),
+    ("longwin", dict(k=2_000, z=1.1, f=0.8, window=6), None),
+]
+
+STRATEGIES = ["mixed", "mintable", "minmig", "readj", "pkg", "potc",
+              "wchoices"]
+
+
+def _batches(shape_cfg, fluct_schedule, n, intervals, seed):
+    """Pre-generate the interval batches once per shape: fluctuation runs
+    against a fixed probe assignment so every strategy sees the same
+    stream (and none can influence its own workload)."""
+    gen = WorkloadGen(seed=seed, total_tuples=n * intervals, **shape_cfg)
+    probe = Assignment(ModHash(N_TASKS, seed=seed))
+    out = []
+    for i in range(intervals):
+        if i:
+            f = fluct_schedule[(i - 1) % len(fluct_schedule)] \
+                if fluct_schedule else None
+            if f is not None:
+                gen.f = f
+            gen.interval(probe, fluctuate=(f is None or f > 0))
+        out.append(gen.draw_tuples(n).astype(np.int64))
+    return out
+
+
+def _run_point(algorithm, batches, window, seed):
+    stage = keyed_stage(PartialWordCount(), n_tasks=N_TASKS,
+                        theta_max=THETA_MAX, window=window, seed=seed,
+                        algorithm=algorithm)
+    t0 = time.perf_counter()
+    for keys in batches:
+        stage.process_interval_arrays(keys)
+    wall = time.perf_counter() - t0
+    reps = stage.reports
+    steady = reps[1:] if len(reps) > 1 else reps
+    denom = sum(r.makespan + r.migration_stall for r in reps)
+    return stage, {
+        "theta_mean": float(np.mean([r.theta for r in steady])),
+        "migrated_bytes": float(sum(r.migrated_bytes for r in reps)),
+        "table_size": int(reps[-1].table_size),
+        "throughput": float(sum(r.tuples for r in reps) / denom)
+        if denom > 0 else 0.0,
+        "wall_s": wall,
+    }
+
+
+def _assert_report_parity(a, b, label):
+    for ra, rb in zip(a.reports, b.reports):
+        same = (ra.tuples == rb.tuples and ra.makespan == rb.makespan
+                and ra.theta == rb.theta
+                and ra.migrated_bytes == rb.migrated_bytes
+                and ra.table_size == rb.table_size)
+        if not same:
+            raise AssertionError(
+                f"parity violation [{label}] interval {ra.interval}: "
+                f"{ra} != {rb}")
+
+
+def build_matrix(quick=True, seed=17):
+    n = 4_000 if quick else 20_000
+    intervals = 6 if quick else 12
+    rows = []
+    for shape, cfg, fluct in SHAPES:
+        window = cfg["window"]
+        gen_cfg = {k: v for k, v in cfg.items() if k != "window"}
+        gen_cfg["window"] = window
+        batches = _batches(gen_cfg, fluct, n, intervals, seed)
+        stages = {}
+        for strat in STRATEGIES:
+            stage, point = _run_point(strat, batches, window, seed)
+            stages[strat] = stage
+            rows.append(dict(shape=shape, strategy=strat, **point))
+        # bit-comparable pairs, asserted on every shape
+        ref_stage, _ = _run_point("mixed_reference", batches, window, seed)
+        _assert_report_parity(stages["mixed"], ref_stage,
+                              f"{shape}: mixed vs mixed_reference")
+        potc1_stage, _ = _run_point(PowerOfBothChoices(n_sources=1),
+                                    batches, window, seed)
+        _assert_report_parity(stages["pkg"], potc1_stage,
+                              f"{shape}: pkg vs potc(n_sources=1)")
+    return {"quick": bool(quick), "seed": seed, "n_tasks": N_TASKS,
+            "theta_max": THETA_MAX, "tuples_per_interval": n,
+            "intervals": intervals, "rows": rows}
+
+
+def rows(quick=True):
+    matrix = build_matrix(quick=quick)
+    out = []
+    for r in matrix["rows"]:
+        out.append((
+            f"matrix/{r['shape']}/{r['strategy']}",
+            r["wall_s"] / matrix["intervals"] * 1e6,
+            (f"theta={r['theta_mean']:.4f};mig={r['migrated_bytes']:.0f};"
+             f"table={r['table_size']};thr={r['throughput']:.2f}"),
+        ))
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--out", default=None, help="write matrix JSON here")
+    ap.add_argument("--csv", default=None, help="write matrix CSV here")
+    args = ap.parse_args()
+    matrix = build_matrix(quick=not args.full)
+    header = "shape,strategy,theta_mean,migrated_bytes,table_size,throughput"
+    lines = [header]
+    for r in matrix["rows"]:
+        lines.append(f"{r['shape']},{r['strategy']},{r['theta_mean']:.6f},"
+                     f"{r['migrated_bytes']:.1f},{r['table_size']},"
+                     f"{r['throughput']:.4f}")
+    print("\n".join(lines))
+    if args.out:
+        with open(args.out, "w") as fh:
+            json.dump(matrix, fh, indent=1, sort_keys=True)
+        print(f"# wrote {args.out}")
+    if args.csv:
+        with open(args.csv, "w") as fh:
+            fh.write("\n".join(lines) + "\n")
+        print(f"# wrote {args.csv}")
+
+
+if __name__ == "__main__":
+    main()

@@ -3,11 +3,16 @@
 
 from . import balancer
 from .balancer import (ALGORITHMS, Assignment, BalanceConfig, ConsistentHash,
-                       KeyStats, ModHash, RebalanceResult, metrics)
+                       KeyStats, ModHash, PartialKeyGrouping,
+                       PartitionStrategy, PowerOfBothChoices, RebalanceResult,
+                       TablePlanner, WChoices, metrics, resolve_strategy,
+                       strategy_names)
 from .controller import ControllerEvent, RebalanceController
 
 __all__ = [
     "balancer", "ALGORITHMS", "Assignment", "BalanceConfig", "ConsistentHash",
     "KeyStats", "ModHash", "RebalanceResult", "metrics",
     "ControllerEvent", "RebalanceController",
+    "PartitionStrategy", "TablePlanner", "PartialKeyGrouping",
+    "PowerOfBothChoices", "WChoices", "resolve_strategy", "strategy_names",
 ]

@@ -3,6 +3,12 @@
 Algorithms (paper Sec. III): simple, llfd (via phased driver), mintable,
 minmig, mixed, mixed_bf; baselines readj, pkg; optimizations compact_mixed +
 HLHE discretization (Sec. IV).
+
+Every strategy — the paper's table planners *and* the competing per-tuple
+choice routers (pkg/potc/wchoices) — is resolvable by name through the
+registry in :mod:`repro.core.balancer.strategy` (``strategy_names()`` /
+``resolve_strategy()``); the legacy ``ALGORITHMS`` dict is a deprecated
+read-only view over the planner subset.
 """
 
 from .types import (Assignment, BalanceConfig, KeyStats, RebalanceResult,
@@ -20,20 +26,26 @@ from .compact import compact_mixed, build_groups
 from .discretize import discretize, hlhe_representatives, total_deviation
 from .reference import (REFERENCE_ALGORITHMS, reference_mintable,
                         reference_minmig, reference_mixed, reference_mixed_bf)
+from .strategy import (ALGORITHMS, ChoiceRouter, PartialKeyGrouping,
+                       PartitionStrategy, PowerOfBothChoices, TablePlanner,
+                       WChoices, _register_planner, register_strategy,
+                       resolve_strategy, strategy_names)
 
-ALGORITHMS = {
-    "simple": simple,
-    "mintable": mintable,
-    "minmig": minmig,
-    "mixed": mixed,
-    "mixed_bf": mixed_bf,
-    "readj": readj,
-    "compact_mixed": compact_mixed,
-    # scalar pre-PR planner, kept as the parity oracle / A-B baseline
-    "mixed_reference": reference_mixed,
-    "mintable_reference": reference_mintable,
-    "minmig_reference": reference_minmig,
-}
+for _name, _fn in (
+    ("simple", simple),
+    ("mintable", mintable),
+    ("minmig", minmig),
+    ("mixed", mixed),
+    ("mixed_bf", mixed_bf),
+    ("readj", readj),
+    ("compact_mixed", compact_mixed),
+    # scalar pre-PR planners, kept as parity oracles / A-B baselines
+    ("mixed_reference", reference_mixed),
+    ("mintable_reference", reference_mintable),
+    ("minmig_reference", reference_minmig),
+):
+    _register_planner(_name, _fn)
+del _name, _fn
 
 __all__ = [
     "Assignment", "BalanceConfig", "KeyStats", "RebalanceResult", "HashRouter",
@@ -45,4 +57,7 @@ __all__ = [
     "total_deviation", "ALGORITHMS", "REFERENCE_ALGORITHMS",
     "reference_mintable", "reference_minmig", "reference_mixed",
     "reference_mixed_bf",
+    "PartitionStrategy", "TablePlanner", "ChoiceRouter",
+    "PartialKeyGrouping", "PowerOfBothChoices", "WChoices",
+    "register_strategy", "resolve_strategy", "strategy_names",
 ]

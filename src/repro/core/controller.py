@@ -22,8 +22,8 @@ from typing import Callable, List, Optional
 
 import numpy as np
 
-from .balancer import (ALGORITHMS, Assignment, BalanceConfig, KeyStats,
-                       RebalanceResult, metrics)
+from .balancer import (Assignment, BalanceConfig, KeyStats, RebalanceResult,
+                       metrics, resolve_strategy)
 
 
 @dataclasses.dataclass
@@ -52,21 +52,10 @@ class RebalanceController:
     def __init__(self, assignment: Assignment, config: BalanceConfig,
                  algorithm="mixed",
                  executor: Optional[MigrationExecutor] = None):
-        if callable(algorithm):
-            # custom planner (e.g. functools.partial over extra knobs, or the
-            # scalar reference oracle for an A/B run) with the standard
-            # (stats, assignment, config) -> RebalanceResult signature
-            self.algorithm_name = getattr(algorithm, "__name__", "custom")
-            self._algorithm = algorithm
-        else:
-            if algorithm not in ALGORITHMS:
-                raise ValueError(f"unknown algorithm {algorithm!r}; "
-                                 f"choose from {sorted(ALGORITHMS)}")
-            self.algorithm_name = algorithm
-            self._algorithm = ALGORITHMS[algorithm]
         self.assignment = assignment
         self.config = config
         self.executor = executor
+        self.use_algorithm(algorithm)
         self.history: List[ControllerEvent] = []
         self._interval = 0
         #: monotone counter bumped every time ``self.assignment`` is replaced
@@ -75,8 +64,25 @@ class RebalanceController:
         #: (see KeyedStage._dest_batch).
         self.assignment_version = 0
 
+    def use_algorithm(self, algorithm) -> None:
+        """Install an ``algorithm=`` spec: a registered strategy name, a bare
+        planner callable ``(stats, assignment, config) -> RebalanceResult``
+        (e.g. ``functools.partial`` over extra knobs, or the scalar reference
+        oracle for an A/B run), or a configured
+        :class:`~repro.core.balancer.strategy.PartitionStrategy` instance —
+        one grammar everywhere (``keyed_stage()`` and ``KeyedStage`` accept
+        exactly the same spec and delegate here)."""
+        strategy = resolve_strategy(algorithm)
+        strategy.bind(self.assignment)
+        self.strategy = strategy
+        self.algorithm_name = strategy.name
+        # legacy surface: the raw planner callable when there is one
+        self._algorithm = getattr(strategy, "fn", None)
+
     # -- paper step 2: trigger decision --------------------------------------
     def should_trigger(self, stats: KeyStats) -> bool:
+        if self.strategy.is_router:
+            return False   # routers balance per tuple; nothing to (re)plan
         return metrics.theta_for(stats, self.assignment) > self.config.theta_max
 
     def triggered_intervals(self) -> List[int]:
@@ -114,12 +120,23 @@ class RebalanceController:
         produce no stats and skip the controller entirely); None keeps the
         self-incrementing counter for callers without one."""
         self._interval = self._interval + 1 if interval is None else interval
+        if self.strategy.is_router:
+            # choice routers balance per tuple and never produce a plan: the
+            # interval boundary is measurement only. theta reflects the
+            # router's own routed-tuple loads; the head-set hook lets
+            # W-Choices refresh its heavy hitters from the step-1 stats.
+            self.strategy.on_stats(stats)
+            loads = self.strategy.loads
+            th = metrics.theta(loads) if loads.size else 0.0
+            ev = ControllerEvent(self._interval, False, th)
+            self.history.append(ev)
+            return ev
         th = metrics.theta_for(stats, self.assignment)
         if not force and th <= self.config.theta_max:
             ev = ControllerEvent(self._interval, False, th)
             self.history.append(ev)
             return ev
-        result = self._algorithm(stats, self.assignment, self.config)
+        result = self.strategy.plan(stats, self.assignment, self.config)
         # Pause/migrate/Resume: the executor moves state for Delta(F,F') only;
         # in jitted substrates this is a step-boundary double-buffer swap.
         if self.executor is not None and len(result.moved_keys):
@@ -139,6 +156,12 @@ class RebalanceController:
         with consistent hashing only ~K/N keys re-hash. The regular algorithm
         then restores balance with minimal migration.
         """
+        if self.strategy.is_router:
+            raise ValueError(
+                f"algorithm {self.algorithm_name!r} is a choice router: "
+                "per-key state is split across candidate workers, so the "
+                "assignment-driven rescale/reconciliation protocol does not "
+                "apply; rebuild the stage at the new width instead")
         old_assignment = self.assignment
         new_router = old_assignment.hash_router.with_n_dest(n_dest)
         table = {k: d for k, d in old_assignment.table.items() if d < n_dest}

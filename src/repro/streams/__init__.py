@@ -10,7 +10,8 @@ from .operators import (BatchResult, Filter, IntervalBatchResult, MergeCounts,
                         WordCount)
 from .state import (ColumnarSpec, ColumnarStateStore, KeyState,
                     TaskStateStore)
-from .topology import StageSpec, Topology, TopologyReport, keyed_stage
+from .topology import (StageSpec, Topology, TopologyReport, keyed_stage,
+                       router_merge_topology)
 
 __all__ = [
     "STATE_BACKENDS", "SUBSTRATES", "IntervalReport", "KeyedStage",
@@ -18,7 +19,8 @@ __all__ = [
     "IntervalBatchResult", "MergeCounts", "Operator", "PartialWordCount",
     "WindowedSelfJoin", "WordCount", "ColumnarSpec", "ColumnarStateStore",
     "KeyState", "TaskStateStore", "StageSpec", "Topology", "TopologyReport",
-    "keyed_stage", "DeviceStateFleet", "DeviceTaskView",
+    "keyed_stage", "router_merge_topology", "DeviceStateFleet",
+    "DeviceTaskView",
     "BACKENDS", "StateBackend", "ObjectBackend", "ColumnarBackend",
     "DeviceBackend", "register_backend", "ShardedDeviceBackend",
     "ShardedStateFleet",

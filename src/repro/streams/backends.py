@@ -475,6 +475,13 @@ class DeviceBackend(StateBackend):
             raise ValueError(f"state_backend={cls.name!r} requires "
                              "vectorized=True (the per-tuple reference path "
                              "uses scalar state access)")
+        if controller.strategy.is_router:
+            raise ValueError(
+                f"state_backend={cls.name!r} requires an assignment-driven "
+                f"strategy: algorithm {controller.algorithm_name!r} routes "
+                "per tuple on live loads, but the device table cache is "
+                "keyed on assignment_version (destinations must be a pure "
+                "function of the key between rebalances)")
         if getattr(operator, "device_mode", None) is None \
                 or getattr(operator, "columnar_spec", None) is None:
             raise ValueError(
@@ -495,6 +502,7 @@ class DeviceBackend(StateBackend):
         # accelerator — checked lazily so ModHash/object stages never
         # import jax
         if not (vectorized
+                and not controller.strategy.is_router
                 and getattr(operator, "columnar_spec", None) is not None
                 and getattr(operator, "device_mode", None) is not None
                 and _is_hash32(controller)):

@@ -131,12 +131,27 @@ class KeyedStage:
                  n_shards: Optional[int] = None,
                  kernel_interpret: Optional[bool] = None,
                  stats_dense_max: int = 1 << 20,
-                 device_domain_max: int = 1 << 22):
+                 device_domain_max: int = 1 << 22,
+                 algorithm=None):
         if substrate not in SUBSTRATES:
             raise ValueError(f"unknown substrate {substrate!r}; "
                              f"choose from {SUBSTRATES}")
         self.operator = operator
         self.controller = controller
+        if algorithm is not None:
+            # same spec grammar as RebalanceController(algorithm=) — name,
+            # planner callable, or configured PartitionStrategy instance
+            # (see RebalanceController.use_algorithm); installed before
+            # backend resolution so backend support checks see the strategy.
+            controller.use_algorithm(algorithm)
+        if (controller.strategy.needs_merge_stage
+                and not getattr(operator, "split_safe", False)):
+            raise ValueError(
+                f"algorithm {controller.algorithm_name!r} splits keys across "
+                f"tasks but operator {operator.name!r} is not split-safe; "
+                "use a split-safe operator (e.g. PartialWordCount) with a "
+                "downstream merge stage (repro.streams.topology), or a "
+                "table-planner algorithm")
         self.window = window
         self.n_tasks = controller.assignment.n_dest
         self.n_shards = n_shards
@@ -259,7 +274,13 @@ class KeyedStage:
         return self.backend.process_interval(keys, values, collect_emits=True)
 
     def _dest_batch(self, keys: np.ndarray) -> np.ndarray:
-        """F(k) for a key batch — numpy Assignment.dest or the Pallas kernel."""
+        """Destinations for a key batch — the strategy's per-tuple router when
+        one is installed, else F(k) via numpy Assignment.dest or the Pallas
+        kernel. Called exactly ONCE per interval batch on every engine path
+        (routers are stateful: their load estimates advance per call)."""
+        strategy = self.controller.strategy
+        if strategy.is_router:
+            return strategy.route(keys)
         if self.substrate == "pallas" and keys.size:
             if int(keys.max()) > np.iinfo(np.int32).max or int(keys.min()) < 0:
                 raise ValueError(
@@ -435,6 +456,10 @@ class KeyedStage:
         New stores must exist before the controller's migration executor runs;
         shrink requires draining removed stores first (state migrates away via
         the rescale plan, since no key may map to a dead task)."""
+        if self.controller.strategy.is_router:
+            # fail before touching stores: controller.rescale would raise
+            # anyway, but only after we had already grown the fleet
+            self.controller.rescale(n_tasks, self.last_stats)
         if self.last_stats is None:
             raise RuntimeError("scale_to requires at least one processed interval")
         while len(self.stores) < n_tasks:

@@ -253,6 +253,13 @@ class Operator:
     #: the engine then reads task loads straight off the fused step's integer
     #: per-task bincount instead of a host bincount over float costs.
     device_unit_cost = False
+    #: True when the operator stays correct if one key's tuples are split
+    #: across tasks (per-tuple output, or a commutative merge a downstream
+    #: stage can combine). Choice-router strategies (pkg/potc/wchoices) split
+    #: keys by design, so KeyedStage refuses ``split_safe = False`` operators
+    #: under a ``needs_merge_stage`` strategy — pair them with a downstream
+    #: merge stage instead (see repro.streams.topology).
+    split_safe = False
 
     def device_finish(self, counts: np.ndarray, win0: np.ndarray,
                       slot0: np.ndarray
@@ -545,6 +552,9 @@ class PartialWordCount(Operator):
     columnar_needs_values = False
     device_mode = "add"
     device_unit_cost = True
+    #: one emit per input tuple, keyed by the same key: a downstream WordCount
+    #: sums the increments to exact totals no matter how the key was split
+    split_safe = True
 
     def __init__(self, bytes_per_entry: float = 16.0):
         self.bytes_per_entry = bytes_per_entry
@@ -612,6 +622,10 @@ class MergeCounts(Operator):
 
     name = "merge"
     device_mode = "max"
+    #: running max is idempotent/commutative across partial streams — but a
+    #: *split* MergeCounts only sees a subset of partials per task, so this
+    #: flag marks per-task safety of the fold, not exactness of a split total
+    split_safe = True
 
     def __init__(self):
         self.bytes_per_entry = 16.0
@@ -684,6 +698,8 @@ class Filter(Operator):
     """
 
     name = "filter"
+    #: stateless, per-tuple output — any split of a key is trivially correct
+    split_safe = True
     #: stateless — the columnar store is never touched, but opting in routes
     #: the stage through the whole-interval single dispatch
     columnar_spec = ColumnarSpec()

@@ -100,6 +100,18 @@ def keyed_stage(operator: Operator, n_tasks: int, theta_max: float, *,
     built-in-operator stage gets the columnar store and the whole-interval
     single dispatch, so the no-per-key-Python property holds across the
     whole pipeline.
+
+    ``algorithm`` takes the unified strategy spec — a registered name from
+    :func:`repro.core.balancer.strategy_names` (table planners like
+    ``"mixed"``/``"mintable"``/``"minmig"``/``"readj"`` *or* choice routers
+    like ``"pkg"``/``"potc"``/``"wchoices"``), a bare planner callable, or a
+    configured :class:`~repro.core.balancer.PartitionStrategy` instance —
+    identical semantics to ``RebalanceController(algorithm=)`` and
+    ``KeyedStage(algorithm=)`` (all three delegate to
+    :meth:`~repro.core.controller.RebalanceController.use_algorithm`).
+    Router strategies split keys across tasks, so the operator must be
+    ``split_safe`` (pair e.g. ``PartialWordCount`` with a downstream
+    ``WordCount`` merge stage — see :func:`router_merge_topology`).
     """
     controller = RebalanceController(
         Assignment(hash_cls(n_tasks, seed=seed)),
@@ -111,6 +123,34 @@ def keyed_stage(operator: Operator, n_tasks: int, theta_max: float, *,
                       state_backend=state_backend, n_shards=n_shards,
                       kernel_interpret=kernel_interpret,
                       migration_bandwidth=migration_bandwidth)
+
+
+def router_merge_topology(partial_op: Operator, merge_op: Operator,
+                          n_tasks: int, theta_max: float, *,
+                          algorithm="pkg", merge_tasks: Optional[int] = None,
+                          merge_algorithm="mixed", seed: int = 0,
+                          **stage_kwargs) -> "Topology":
+    """The canonical choice-router pairing: split stage + downstream merge.
+
+    Choice routers (``"pkg"``/``"potc"``/``"wchoices"``) split one key's
+    tuples across candidate tasks, which is exactly the PKG papers' two-step
+    dataflow (Fig. 2a of 1510.07623): a *split-safe* partial operator under
+    the router, then a key-grouped merge operator that recombines the
+    partials. This helper wires that shape — ``partial_op`` under
+    ``algorithm`` feeding ``merge_op`` under a table planner (the merge
+    stage sees each key on one task again, so any planner applies).
+
+    ``stage_kwargs`` pass through to both :func:`keyed_stage` calls
+    (``window=``, ``state_backend=``, ...).
+    """
+    return Topology([
+        StageSpec("split", keyed_stage(partial_op, n_tasks, theta_max,
+                                       algorithm=algorithm, seed=seed,
+                                       **stage_kwargs)),
+        StageSpec("merge", keyed_stage(merge_op, merge_tasks or n_tasks,
+                                       theta_max, algorithm=merge_algorithm,
+                                       seed=seed + 1, **stage_kwargs)),
+    ])
 
 
 class Topology:

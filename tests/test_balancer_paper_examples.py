@@ -92,3 +92,77 @@ def test_gamma_example():
     assert g1[0] == pytest.approx(1.0) and g1[1] == pytest.approx(1.0)
     g05 = stats.gamma(0.5)
     assert g05[1] > g05[0]
+
+
+# -- competing partitioners: the papers' worked examples ----------------------
+#
+# The comparison baselines are pinned to the published headline numbers, not
+# just self-consistency: PKG (ICDE'15, arXiv:1504.00788 / 1510.07623) bounds
+# the hot key's per-worker share at p1/2 where key grouping pays p1; W-Choices
+# (arXiv:1510.05714) shows two choices stop working once p1 > 2/W and spreads
+# head keys over all W workers for a p1/W share. `candidate_fn` pins the
+# candidate sets so the arithmetic matches the papers' examples exactly.
+
+from repro.core.balancer import (ChoiceRouter, ModHash, PartialKeyGrouping,
+                                 PowerOfBothChoices, WChoices)
+
+
+def _loads_for(router, keys, n_dest):
+    dests = router.route(np.asarray(keys, dtype=np.int64))
+    return np.bincount(dests, minlength=n_dest).tolist()
+
+
+def test_pkg_halves_the_hot_key():
+    """1504.00788 Sec. 3: key grouping's max load is p1*n; PKG's two choices
+    cut the hot key's contribution to exactly p1*n/2 per worker."""
+    n = 1000
+    stream = np.zeros(n, dtype=np.int64)          # one key, p1 = 1
+    kg = ChoiceRouter(n_choices=1, candidate_fn=lambda uk: [[0]] * len(uk))
+    kg.bind(Assignment(ModHash(2)))
+    assert _loads_for(kg, stream, 2) == [1000, 0]        # KG: p1*n on one task
+    pkg = PartialKeyGrouping(candidate_fn=lambda uk: [[0, 1]] * len(uk))
+    pkg.bind(Assignment(ModHash(2)))
+    assert _loads_for(pkg, stream, 2) == [500, 500]      # PKG: p1*n/2 each
+
+
+def test_pkg_disjoint_pairs_split_evenly():
+    """Two keys at 80/20 with disjoint candidate pairs: each key's tuples
+    split in half over its own pair — loads [400, 400, 100, 100]."""
+    stream = np.array([0] * 800 + [1] * 200, dtype=np.int64)
+    pkg = PartialKeyGrouping(
+        candidate_fn=lambda uk: [[0, 1] if k == 0 else [2, 3] for k in uk])
+    pkg.bind(Assignment(ModHash(4)))
+    assert _loads_for(pkg, stream, 4) == [400, 400, 100, 100]
+    assert metrics.theta(pkg.loads) == pytest.approx(0.6)    # 400/250 - 1
+
+
+def test_potc_local_estimates_reach_the_same_split():
+    """1504.00788's point: each source routing on its OWN load estimates
+    (no coordination) still halves the hot key — 2 sources each split their
+    share of the stream, summing to the same [n/2, n/2]."""
+    stream = np.zeros(1000, dtype=np.int64)
+    potc = PowerOfBothChoices(
+        n_sources=2, candidate_fn=lambda uk: [[0, 1]] * len(uk))
+    potc.bind(Assignment(ModHash(2)))
+    assert _loads_for(potc, stream, 2) == [500, 500]
+    # and each source's local view accounts for exactly its half
+    assert potc._src_loads.sum(axis=1).tolist() == [500.0, 500.0]
+
+
+def test_wchoices_beats_two_choices_on_an_extreme_head():
+    """1510.05714's worked point: with p1 > 2/W two choices bottom out at
+    p1*n/2, while W-Choices spreads the head key over all W workers for
+    p1*n/W — here W=5, n=1000: 500 vs 200."""
+    W, n = 5, 1000
+    stream = np.zeros(n, dtype=np.int64)
+    stats = KeyStats(keys=np.array([0]), cost=np.array([float(n)]),
+                     mem=np.array([1.0]), freq=np.array([float(n)]))
+    pkg = PartialKeyGrouping(candidate_fn=lambda uk: [[0, 1]] * len(uk))
+    pkg.bind(Assignment(ModHash(W)))
+    assert max(_loads_for(pkg, stream, W)) == n // 2         # p1*n/2
+    w = WChoices(candidate_fn=lambda uk: [[0, 1]] * len(uk))
+    w.bind(Assignment(ModHash(W)))
+    w.on_stats(stats)                  # head detection from interval stats
+    assert w.head_keys.tolist() == [0]
+    assert _loads_for(w, stream, W) == [n // W] * W          # p1*n/W each
+    assert metrics.theta(w.loads) == 0.0

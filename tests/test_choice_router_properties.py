@@ -1,0 +1,190 @@
+"""Choice-router invariants: PKG / Power of Both Choices / W-Choices.
+
+Property-based (Hypothesis) coverage of the papers' claims on adversarial
+zipf streams (engine-level integration without the extras lives in
+``test_choice_routers.py``):
+
+* candidate sets are stable per key (pure hash functions — identical across
+  batches and fresh router instances) and every routed destination is drawn
+  from the tuple's candidate set;
+* loads stay within the papers' bounds: the aggregate max load tracks
+  ``max(n/W, max_k count_k / distinct_candidates_k)`` (the structural floor —
+  a key can only spread over its candidates, and colliding hashes shrink
+  that set), and the hot key itself splits near-evenly across its candidates;
+* PoTC with one source is bit-identical to PKG (the 1504.00788 paper's
+  "both choices" policy *is* PKG's; multiple sources only localize the load
+  estimates);
+* a split stage under a router + downstream merge matches the single-route
+  oracle exactly (the Fig. 2a dataflow of 1510.07623).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.balancer import Assignment, KeyStats, ModHash
+from repro.core.balancer.strategy import (PartialKeyGrouping,
+                                          PowerOfBothChoices, WChoices)
+from repro.streams import (PartialWordCount, WordCount, keyed_stage,
+                           router_merge_topology)
+
+pytest.importorskip("hypothesis")   # optional [test] extra
+from hypothesis import given, settings, strategies as st
+
+
+def _zipf_keys(seed, z, n, domain):
+    rng = np.random.default_rng(seed)
+    return ((rng.zipf(z, size=n) - 1) % domain).astype(np.int64)
+
+
+ROUTER_CASES = st.tuples(
+    st.integers(0, 2**31 - 1),            # stream seed
+    st.floats(1.05, 2.6),                 # zipf exponent (adversarial skew)
+    st.integers(500, 4000),               # tuples
+    st.sampled_from([40, 300, 1500]),     # key domain
+    st.sampled_from([4, 8, 16]),          # workers
+)
+
+
+# -- candidate-set stability ---------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(ROUTER_CASES, st.sampled_from(["pkg", "potc", "wchoices"]))
+def test_candidates_stable_and_contain_destinations(case, name):
+    seed, z, n, domain, W = case
+    keys = _zipf_keys(seed, z, n, domain)
+    a = Assignment(ModHash(W, seed=seed % 997))
+    make = {"pkg": PartialKeyGrouping,
+            "potc": PowerOfBothChoices,
+            "wchoices": WChoices}[name]
+    r1, r2 = make(), make()
+    r1.bind(a)
+    r2.bind(a)
+    c1 = r1.candidates(keys)
+    assert np.array_equal(c1, r2.candidates(keys))           # instance-stable
+    assert np.array_equal(c1, r1.candidates(keys))           # batch-stable
+    assert c1.shape == (n, 2) and (0 <= c1).all() and (c1 < W).all()
+    d = r1.route(keys)
+    # tail routing: every destination from the 2-candidate set (wchoices has
+    # no head yet — no stats seen — so it degrades to exactly PKG's sets)
+    assert ((d == c1[:, 0]) | (d == c1[:, 1])).all()
+    assert np.bincount(d, minlength=W).sum() == n
+    assert np.array_equal(np.bincount(d, minlength=W), r1.loads)
+
+
+# -- load bounds on adversarial zipf ------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(ROUTER_CASES)
+def test_pkg_loads_within_structural_bound(case):
+    seed, z, n, domain, W = case
+    keys = _zipf_keys(seed, z, n, domain)
+    pkg = PartialKeyGrouping()
+    pkg.bind(Assignment(ModHash(W, seed=seed % 997)))
+    d = pkg.route(keys)
+    loads = np.bincount(d, minlength=W)
+    uk, cnt = np.unique(keys, return_counts=True)
+    du = np.array([len(set(row)) for row in pkg.candidates(uk).tolist()])
+    # the structural floor: perfect balance is n/W, but a key can only spread
+    # over its distinct candidates (two hashes may collide: du == 1)
+    floor = max(n / W, float((cnt / du).max()))
+    assert loads.max() <= floor * 1.5 + pkg.chunk
+    # the hot key itself splits near-evenly over its candidates (round-robin
+    # from the least-loaded one; staleness costs at most one per chunk)
+    hot = int(np.argmax(cnt))
+    n_chunks = -(-n // pkg.chunk)
+    hot_share = np.bincount(d[keys == uk[hot]], minlength=W).max()
+    assert hot_share <= -(-int(cnt[hot]) // int(du[hot])) + n_chunks
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.floats(1.6, 2.8),
+       st.sampled_from([8, 16]))
+def test_wchoices_flattens_head_keys(seed, z, W):
+    n, domain = 4000, 300
+    keys = _zipf_keys(seed, z, n, domain)
+    w = WChoices(head_threshold=0.01)
+    w.bind(Assignment(ModHash(W, seed=seed % 997)))
+    w.route(keys)                               # interval 1: PKG-equivalent
+    uk, cnt = np.unique(keys, return_counts=True)
+    w.on_stats(KeyStats(keys=uk, cost=cnt.astype(float),
+                        mem=np.ones(uk.size), freq=cnt.astype(float)))
+    assert w.head_keys.size >= 1                # zipf >= 1.6 has a clear head
+    keys2 = _zipf_keys(seed + 1, z, n, domain)
+    before = w.loads.copy()
+    d2 = w.route(keys2)
+    loads2 = np.bincount(d2, minlength=W)
+    assert np.array_equal(w.loads - before, loads2)
+    # every head key spreads over ALL W workers, so its per-worker share is
+    # ~count/W — two choices could never do better than count/2
+    n_chunks = -(-n // w.chunk)
+    head = set(w.head_keys.tolist())
+    for k in head:
+        kcnt = int((keys2 == k).sum())
+        if kcnt < W:
+            continue
+        share = np.bincount(d2[keys2 == k], minlength=W).max()
+        assert share <= -(-kcnt // W) + n_chunks
+
+
+# -- PoTC locality claim -------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(ROUTER_CASES)
+def test_potc_single_source_is_pkg(case):
+    seed, z, n, domain, W = case
+    keys = _zipf_keys(seed, z, n, domain)
+    a = Assignment(ModHash(W, seed=seed % 997))
+    pkg = PartialKeyGrouping()
+    potc = PowerOfBothChoices(n_sources=1)
+    pkg.bind(a)
+    potc.bind(a)
+    assert np.array_equal(pkg.route(keys), potc.route(keys))
+    assert np.array_equal(pkg.loads, potc.loads)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.sampled_from([2, 4, 8]))
+def test_potc_sources_partition_the_stream(seed, S):
+    keys = _zipf_keys(seed, 1.4, 3000, 200)
+    potc = PowerOfBothChoices(n_sources=S)
+    potc.bind(Assignment(ModHash(8, seed=1)))
+    d = potc.route(keys)
+    cand = potc.candidates(keys)
+    assert ((d == cand[:, 0]) | (d == cand[:, 1])).all()
+    # per-source local estimates sum to the true routed loads
+    assert potc._src_loads.shape == (S, 8)
+    assert np.array_equal(potc.loads, np.bincount(d, minlength=8))
+
+
+# -- merge-stage oracle --------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.floats(1.1, 2.2),
+       st.sampled_from(["pkg", "potc", "wchoices"]))
+def test_router_plus_merge_matches_single_route_oracle(seed, z, algo):
+    """Split word count under a router + WordCount merge == plain WordCount.
+
+    Stage 1 emits exactly one increment per input tuple keyed by the same
+    key, so the merge stage's per-(key, window) totals are exact tuple
+    counts no matter how the router split the key — the summed emit stream
+    (sum of running counts = sum over keys of c(c+1)/2 per window, an
+    order-insensitive exactness witness) must match the single-route
+    pipeline bit-for-bit.
+    """
+    topo = router_merge_topology(PartialWordCount(), WordCount(), 8, 0.08,
+                                 algorithm=algo, window=2, seed=seed % 997)
+    oracle = keyed_stage(WordCount(), n_tasks=8, theta_max=0.08,
+                         algorithm="mixed", window=2, seed=seed % 997)
+    for iv in range(3):
+        keys = _zipf_keys(seed + iv, z, 1500, 250)
+        topo.process_interval(keys)
+        oracle.process_interval_arrays(keys)
+    assert topo["merge"].emitted_sum == oracle.emitted_sum
+    # routers never plan: no migration, no table, no pause
+    split = topo["split"]
+    assert all(r.migrated_bytes == 0.0 for r in split.reports)
+    assert all(r.table_size == 0 for r in split.reports)
+    assert all(r.buffered == 0 for r in split.reports)
+    assert not split.controller.triggered_intervals()
+
+

@@ -1,0 +1,53 @@
+"""Choice routers end-to-end through the engine (no hypothesis needed).
+
+Property-based coverage of the papers' bounds lives in
+``test_choice_router_properties.py``; this module keeps the engine-level
+integration runnable without the optional [test] extras.
+"""
+
+import numpy as np
+import pytest
+
+from repro.streams import PartialWordCount, keyed_stage
+
+
+def _zipf_keys(seed, z, n, domain):
+    rng = np.random.default_rng(seed)
+    return ((rng.zipf(z, size=n) - 1) % domain).astype(np.int64)
+
+
+@pytest.mark.parametrize("algo", ["pkg", "potc", "wchoices"])
+def test_router_end_to_end_vectorized(algo):
+    stage = keyed_stage(PartialWordCount(), n_tasks=8, theta_max=0.08,
+                        algorithm=algo, window=2)
+    assert stage.state_backend == "columnar"     # auto never picks device
+    rng = np.random.default_rng(5)
+    for _ in range(4):
+        keys = ((rng.zipf(1.3, size=2000) - 1) % 500).astype(np.int64)
+        rep = stage.process_interval_arrays(keys)
+        assert rep.tuples == 2000
+        assert rep.migrated_bytes == 0.0 and rep.migration_stall == 0.0
+        assert rep.throughput > 0
+    assert stage.controller.algorithm_name == algo
+    assert len(stage.controller.history) == 4
+    assert not any(ev.triggered for ev in stage.controller.history)
+
+
+@pytest.mark.parametrize("algo", ["pkg", "wchoices"])
+def test_router_reference_path_parity(algo):
+    """vectorized=False (per-tuple loop, object store) must produce the same
+    reports: _dest_batch runs the router exactly once per interval on both
+    paths, and fresh instances with equal (n_dest, seed) route identically."""
+    fast = keyed_stage(PartialWordCount(), n_tasks=6, theta_max=0.08,
+                       algorithm=algo, window=2, seed=11)
+    slow = keyed_stage(PartialWordCount(), n_tasks=6, theta_max=0.08,
+                       algorithm=algo, window=2, seed=11, vectorized=False)
+    rng = np.random.default_rng(9)
+    for _ in range(3):
+        keys = ((rng.zipf(1.5, size=1200) - 1) % 300).astype(np.int64)
+        rf = fast.process_interval_arrays(keys)
+        rs = slow.process_interval_arrays(keys)
+        assert rf.makespan == rs.makespan
+        assert rf.theta == rs.theta
+        assert np.array_equal(rf.task_loads, rs.task_loads)
+    assert fast.emitted_sum == slow.emitted_sum

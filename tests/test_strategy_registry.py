@@ -1,0 +1,205 @@
+"""The PartitionStrategy protocol + registry (the `algorithm=` seam).
+
+One spec grammar everywhere: RebalanceController(algorithm=),
+KeyedStage(algorithm=) and keyed_stage(algorithm=) accept a registered name,
+a bare planner callable, or a configured strategy instance with identical
+semantics; the legacy ALGORITHMS dict is a deprecated read-only view.
+"""
+
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import (BalanceConfig, PartialKeyGrouping, PartitionStrategy,
+                        PowerOfBothChoices, RebalanceController, TablePlanner,
+                        WChoices, resolve_strategy, strategy_names)
+from repro.core.balancer import (ALGORITHMS, Assignment, KeyStats, ModHash,
+                                 mixed)
+from repro.core.balancer.strategy import get_strategy, register_strategy
+from repro.streams import PartialWordCount, WordCount, keyed_stage
+
+
+def _stats(n=16):
+    return KeyStats(keys=np.arange(n), cost=np.arange(n) + 1.0,
+                    mem=np.ones(n))
+
+
+# -- registry surface ---------------------------------------------------------
+
+def test_registry_covers_planners_and_routers():
+    names = strategy_names()
+    assert names == tuple(sorted(names))
+    for name in ("mixed", "mintable", "minmig", "readj", "simple",
+                 "pkg", "potc", "wchoices"):
+        assert name in names
+
+
+def test_resolve_name_returns_fresh_instances():
+    a = resolve_strategy("pkg")
+    b = resolve_strategy("pkg")
+    assert a is not b                       # routers carry per-controller state
+    assert a.is_router and a.needs_merge_stage and not a.plans_migration
+
+
+def test_resolve_instance_passthrough():
+    inst = PowerOfBothChoices(n_sources=2)
+    assert resolve_strategy(inst) is inst
+
+
+def test_resolve_callable_wraps_as_planner():
+    strat = resolve_strategy(mixed)
+    assert isinstance(strat, TablePlanner)
+    assert strat.name == "mixed"
+    assert not strat.is_router and strat.plans_migration
+    assert strat.fn is mixed
+
+
+def test_unknown_name_error_lists_registry():
+    with pytest.raises(ValueError, match="unknown algorithm"):
+        get_strategy("nope")
+    try:
+        get_strategy("nope")
+    except ValueError as e:
+        assert str(list(strategy_names())) in str(e)
+
+
+def test_register_strategy_requires_name():
+    class Nameless(PartitionStrategy):
+        pass
+    with pytest.raises(ValueError, match="non-empty 'name'"):
+        register_strategy(Nameless)
+
+
+def test_capability_flags():
+    for name in ("mixed", "mintable", "minmig", "readj"):
+        s = resolve_strategy(name)
+        assert s.kind == "planner" and s.plans_migration
+        assert not s.needs_merge_stage and not s.is_router
+    for name in ("pkg", "potc", "wchoices"):
+        s = resolve_strategy(name)
+        assert s.kind == "router" and s.needs_merge_stage
+        assert not s.plans_migration and s.is_router
+
+
+# -- deprecated ALGORITHMS view ----------------------------------------------
+
+def test_algorithms_view_warns_and_matches_registry():
+    with pytest.warns(DeprecationWarning):
+        fn = ALGORITHMS["mixed"]
+    assert fn is mixed
+    with pytest.warns(DeprecationWarning):
+        names = set(ALGORITHMS)
+    assert names < set(strategy_names())    # planner subset; routers excluded
+    assert "pkg" not in names
+
+
+def test_algorithms_view_read_only():
+    assert not hasattr(ALGORITHMS, "__setitem__")
+    with pytest.raises(TypeError):
+        ALGORITHMS["x"] = mixed             # Mapping: no item assignment
+
+
+def test_import_does_not_warn():
+    # the view only warns on *access*; importing the package must stay quiet
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        import importlib
+        import repro.core
+        importlib.reload(repro.core)
+
+
+# -- controller resolution ----------------------------------------------------
+
+def test_controller_accepts_name_callable_instance():
+    cfg = BalanceConfig(theta_max=0.08)
+    by_name = RebalanceController(Assignment(ModHash(4)), cfg,
+                                  algorithm="mixed")
+    by_call = RebalanceController(Assignment(ModHash(4)), cfg, algorithm=mixed)
+    by_inst = RebalanceController(Assignment(ModHash(4)), cfg,
+                                  algorithm=TablePlanner(mixed))
+    assert (by_name.algorithm_name == by_call.algorithm_name
+            == by_inst.algorithm_name == "mixed")
+    st = _stats()
+    evs = [c.on_interval(st, force=True)
+           for c in (by_name, by_call, by_inst)]
+    r0 = evs[0].result
+    for ev in evs[1:]:
+        assert ev.result.theta == r0.theta
+        assert np.array_equal(ev.result.moved_keys, r0.moved_keys)
+
+
+def test_controller_unknown_name_lists_strategies():
+    with pytest.raises(ValueError, match="pkg"):
+        RebalanceController(Assignment(ModHash(4)), BalanceConfig(),
+                            algorithm="not_a_strategy")
+
+
+def test_controller_callable_name_passthrough():
+    def probe(stats, assignment, config):            # pragma: no cover
+        raise AssertionError
+    c = RebalanceController(Assignment(ModHash(4)), BalanceConfig(),
+                            algorithm=probe)
+    assert c.algorithm_name == "probe"
+
+
+def test_router_controller_never_triggers_or_rescales():
+    c = RebalanceController(Assignment(ModHash(8)), BalanceConfig(),
+                            algorithm="pkg")
+    st = _stats()
+    assert not c.should_trigger(st)
+    ev = c.on_interval(st, force=True)               # force cannot plan either
+    assert not ev.triggered and ev.result is None
+    with pytest.raises(ValueError, match="choice router"):
+        c.rescale(12, st)
+
+
+# -- engine-level unification -------------------------------------------------
+
+def test_keyed_stage_accepts_strategy_instance():
+    stage = keyed_stage(PartialWordCount(), n_tasks=6, theta_max=0.08,
+                        algorithm=PowerOfBothChoices(n_sources=2))
+    assert stage.controller.algorithm_name == "potc"
+    assert stage.controller.strategy.n_dest == 6     # bound to the assignment
+    rep = stage.process_interval_arrays(np.arange(300, dtype=np.int64) % 40)
+    assert rep.tuples == 300 and rep.migrated_bytes == 0.0
+
+
+def test_keyed_stage_algorithm_override_kwarg():
+    from repro.streams import KeyedStage
+    c = RebalanceController(Assignment(ModHash(4)), BalanceConfig(),
+                            algorithm="mixed")
+    stage = KeyedStage(PartialWordCount(), c, algorithm="pkg")
+    assert c.algorithm_name == "pkg" and c.strategy.is_router
+    assert stage.controller is c
+
+
+def test_router_requires_split_safe_operator():
+    with pytest.raises(ValueError, match="not split-safe"):
+        keyed_stage(WordCount(), n_tasks=4, theta_max=0.08, algorithm="pkg")
+
+
+def test_router_rejects_device_backend():
+    with pytest.raises(ValueError, match="assignment-driven"):
+        keyed_stage(PartialWordCount(), n_tasks=4, theta_max=0.08,
+                    algorithm="pkg", state_backend="device")
+
+
+def test_router_rejects_scale_to():
+    stage = keyed_stage(PartialWordCount(), n_tasks=4, theta_max=0.08,
+                        algorithm="wchoices")
+    stage.process_interval_arrays(np.arange(50, dtype=np.int64))
+    n_stores = len(stage.stores)
+    with pytest.raises(ValueError, match="choice router"):
+        stage.scale_to(8)
+    assert len(stage.stores) == n_stores             # fleet untouched
+
+
+def test_router_binding_uses_assignment_seed():
+    a = Assignment(ModHash(8, seed=41))
+    pkg = PartialKeyGrouping()
+    pkg.bind(a)
+    assert pkg.seed == 41 and pkg.n_dest == 8
+    w = WChoices(seed=7)
+    w.bind(a)
+    assert w.seed == 7                               # explicit seed wins
