@@ -11,7 +11,12 @@ swing on the same machine):
 * **engine fast path** (``--fastpath-fresh`` / ``--fastpath-baseline``):
   ``engine_fastpath`` flat ``series``, keyed by point name on ``seconds``
   (the per-tuple/vectorized dispatch A/B and the object/columnar
-  store-backend A/B).
+  store-backend A/B);
+* **sketch stats** (``--sketch-fresh`` / ``--sketch-baseline``):
+  ``sketch_scaling`` series, keyed by ``(shape, k, mode)`` on ``seconds``
+  (the exact-vs-sketch controller interval cycles — a regression in either
+  mode's cycle time is caught here; the sketch's own >= 5x speedup and
+  theta-quality contracts are asserted inside the benchmark itself).
 
 A third section gates *values*, not wall time: **strategy matrix**
 (``--matrix-fresh`` / ``--matrix-baseline``) compares the ``mixed``-planner
@@ -43,11 +48,18 @@ Usage (what CI runs):
 
     python benchmarks/planner_scaling.py --smoke --out fresh.json
     python benchmarks/engine_fastpath.py --out fresh_fastpath.json
+    python benchmarks/sketch_scaling.py --smoke --out fresh_sketch.json
     python benchmarks/check_perf_gate.py --fresh fresh.json \
         --baseline benchmarks/planner_scaling.json \
         --fastpath-fresh fresh_fastpath.json \
         --fastpath-baseline benchmarks/engine_fastpath.json \
+        --sketch-fresh fresh_sketch.json \
+        --sketch-baseline benchmarks/sketch_scaling.json \
         --max-ratio 2.0
+
+The committed sketch baseline (``benchmarks/sketch_scaling.json``) is the
+default sweep (K=1e5 quality shapes + the K=1e6 scale point), a superset
+of the --smoke points.
 """
 
 from __future__ import annotations
@@ -64,6 +76,10 @@ def _index_planner(series):
 
 def _index_fastpath(series):
     return {(s["name"],): s["seconds"] for s in series}
+
+
+def _index_sketch(series):
+    return {(s["shape"], s["k"], s["mode"]): s["seconds"] for s in series}
 
 #: strategy-matrix metrics gated by value (wall_s is machine noise; these
 #: are deterministic functions of the seeded workload + planner behavior)
@@ -145,6 +161,11 @@ def main() -> None:
     ap.add_argument("--fastpath-baseline",
                     default="benchmarks/engine_fastpath.json",
                     help="committed engine_fastpath baseline JSON")
+    ap.add_argument("--sketch-fresh", default=None,
+                    help="JSON from the just-run sketch_scaling A/B")
+    ap.add_argument("--sketch-baseline",
+                    default="benchmarks/sketch_scaling.json",
+                    help="committed sketch_scaling baseline JSON")
     ap.add_argument("--matrix-fresh", default=None,
                     help="JSON from the just-run strategy_matrix sweep")
     ap.add_argument("--matrix-baseline",
@@ -165,9 +186,9 @@ def main() -> None:
     args = ap.parse_args()
 
     if (args.fresh is None and args.fastpath_fresh is None
-            and args.matrix_fresh is None):
-        print("perf gate misconfigured: pass --fresh, --fastpath-fresh "
-              "and/or --matrix-fresh", file=sys.stderr)
+            and args.sketch_fresh is None and args.matrix_fresh is None):
+        print("perf gate misconfigured: pass --fresh, --fastpath-fresh, "
+              "--sketch-fresh and/or --matrix-fresh", file=sys.stderr)
         sys.exit(2)
 
     violations = []
@@ -187,6 +208,15 @@ def main() -> None:
         with open(args.fastpath_baseline) as f:
             base = _index_fastpath(json.load(f)["series"])
         v, g = _gate_section("engine_fastpath", fresh, base, args.max_ratio,
+                             args.min_baseline_s)
+        violations += v
+        gated += g
+    if args.sketch_fresh is not None:
+        with open(args.sketch_fresh) as f:
+            fresh = _index_sketch(json.load(f)["series"])
+        with open(args.sketch_baseline) as f:
+            base = _index_sketch(json.load(f)["series"])
+        v, g = _gate_section("sketch_scaling", fresh, base, args.max_ratio,
                              args.min_baseline_s)
         violations += v
         gated += g

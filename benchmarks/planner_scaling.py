@@ -15,6 +15,14 @@ Every A/B point also asserts plan parity (`RebalanceResult.same_plan`), so
 the reported speedup is for bit-identical output. The headline acceptance
 number is ``speedups["tight"]["100000"]`` (>= 10x required).
 
+A ``mixed_sketch`` series rides along: the full sketch-mode controller
+interval cycle (streaming ``ingest`` + O(head) snapshot/trigger/plan, see
+``repro.core.balancer.sketch``) timed on the same instances. Exact
+planners are capped at K=1e6 (materializing O(K) stats arrays per point
+is exactly what sketch mode exists to avoid); the sketch series is what
+completes the K=1e7 point in ``--full``, with controller-resident stats
+bytes reported per point.
+
 Run directly for JSON output:
 
     PYTHONPATH=src:. python benchmarks/planner_scaling.py [--full|--smoke] [--out f]
@@ -33,9 +41,11 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro.core import RebalanceController
 from repro.core.balancer import (Assignment, BalanceConfig, ModHash,
-                                 compact_mixed, mintable, minmig, mixed,
-                                 readj, reference_mixed)
+                                 SketchConfig, compact_mixed, metrics,
+                                 mintable, minmig, mixed, readj,
+                                 reference_mixed)
 from repro.streams.generator import WorkloadGen
 
 PROFILES = {
@@ -47,6 +57,7 @@ PROFILES = {
 # JSON never silently narrows coverage
 REFERENCE_K_CAP = 100_000     # scalar planner: ~18 s at 1e5 on 'tight'
 READJ_K_CAP = 10_000          # pairwise search is O(H^2) per round
+EXACT_K_CAP = 1_000_000       # O(K) stats + plan; sketch mode beyond this
 
 
 def _head_mixed(stats, assignment, config):
@@ -94,13 +105,38 @@ def _time_algo(fn, stats, assignment, cfg, repeats: int):
     return best
 
 
+def _time_sketch_cycle(stats, assignment, cfg, repeats: int):
+    """Full sketch-mode interval cycle: streaming ingest of the raw
+    per-interval arrays + O(head) snapshot/trigger/plan. Returns
+    (seconds, event, resident_bytes, head_keys)."""
+    best, ev, resident, head = float("inf"), None, 0, 0
+    for _ in range(repeats):
+        ctrl = RebalanceController(
+            dataclasses.replace(assignment, table=dict(assignment.table)),
+            cfg, algorithm="mixed", stats_mode="sketch",
+            sketch=SketchConfig())
+        t0 = time.perf_counter()
+        ctrl.ingest(stats.keys, stats.cost, freq=stats.freq)
+        ctrl.ingest(stats.keys, np.zeros(stats.keys.size), mem=stats.mem)
+        e = ctrl.on_interval(None, force=True)
+        dt = time.perf_counter() - t0
+        if dt < best:
+            snap = ctrl.last_stats
+            best, ev = dt, e
+            head = int(snap.keys.size)
+            resident = int(ctrl.sketch.nbytes) + int(sum(
+                a.nbytes for a in (snap.keys, snap.cost, snap.mem, snap.freq)
+                if a is not None))
+    return best, ev, resident, head
+
+
 def run(ks: Optional[List[int]] = None, full: bool = False,
         smoke: bool = False) -> dict:
     if ks is None:
         if smoke:
             ks = [5_000]
         elif full:
-            ks = [10_000, 30_000, 100_000, 300_000, 1_000_000]
+            ks = [10_000, 30_000, 100_000, 300_000, 1_000_000, 10_000_000]
         else:
             ks = [10_000, 30_000, 100_000]
     series: List[dict] = []
@@ -119,6 +155,13 @@ def run(ks: Optional[List[int]] = None, full: bool = False,
                                     "reason": f"O(H^2) search; capped at "
                                               f"K={READJ_K_CAP}"})
                     continue
+                if k > EXACT_K_CAP:
+                    skipped.append({"algo": name, "profile": profile, "k": k,
+                                    "reason": f"exact O(K) stats + plan; "
+                                              f"capped at K={EXACT_K_CAP} "
+                                              f"(sketch mode covers larger "
+                                              f"K)"})
+                    continue
                 res = _time_algo(fn, stats, assignment, cfg, repeats)
                 series.append({
                     "profile": profile, "algo": name, "k": k,
@@ -131,6 +174,21 @@ def run(ks: Optional[List[int]] = None, full: bool = False,
                 })
                 if name == "mixed":
                     mixed_time = res
+            # sketch-mode interval cycle at every K — the only series at
+            # K > EXACT_K_CAP, where O(K) stats materialization is the
+            # bottleneck the sketch removes
+            t_s, ev_s, resident, head = _time_sketch_cycle(
+                stats, assignment, cfg, repeats)
+            series.append({
+                "profile": profile, "algo": "mixed_sketch", "k": k,
+                "plan_time_s": t_s,
+                "theta": metrics.theta_for(stats, ev_s.result.assignment),
+                "feasible_balance": ev_s.result.feasible_balance,
+                "table_size": ev_s.result.table_size,
+                "moved_keys": int(len(ev_s.result.moved_keys)),
+                "head_keys": head,
+                "stats_bytes": resident,
+            })
             if k > REFERENCE_K_CAP:
                 skipped.append({"algo": "reference_mixed", "profile": profile,
                                 "k": k,
@@ -167,7 +225,8 @@ def rows(quick: bool = True):
     r = run(ks=[10_000, 30_000] if quick else [10_000, 30_000, 100_000])
     out = []
     for s in r["series"]:
-        if s["algo"] in ("mixed", "reference_mixed", "compact_mixed_r3"):
+        if s["algo"] in ("mixed", "reference_mixed", "compact_mixed_r3",
+                         "mixed_sketch"):
             out.append((f"planner_scaling/{s['profile']}/{s['algo']}/k{s['k']}",
                         s["plan_time_s"] * 1e6,
                         f"theta={s['theta']:.4f};table={s['table_size']}"))
@@ -181,7 +240,8 @@ def rows(quick: bool = True):
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--full", action="store_true",
-                    help="extend the sweep to K=3e5 and 1e6")
+                    help="extend the sweep to K=3e5, 1e6 and a sketch-only "
+                         "K=1e7 point")
     ap.add_argument("--smoke", action="store_true",
                     help="single small K (CI): exercises every algorithm, "
                          "the reference A/B and the parity check in seconds")

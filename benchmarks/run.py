@@ -15,13 +15,16 @@ MODULES = [
     "fig14_realdata", "fig15_scaleout", "fig16_tpch", "fig17_table_size",
     "fig18_table_growth", "fig19_window", "fig20_beta",
     "moe_skewshield", "kernels_bench", "engine_fastpath", "planner_scaling",
-    "topology_pipeline", "strategy_matrix",
+    "sketch_scaling", "topology_pipeline", "strategy_matrix",
 ]
 
 #: the per-PR CI subset (--smoke): one representative module per subsystem —
-#: single-stage engine figure, multi-stage topology, and the cross-strategy
+#: single-stage engine figure, multi-stage topology, the cross-strategy
 #: matrix (which also asserts mixed/reference and pkg/potc parity per shape)
-SMOKE_MODULES = ["fig16_tpch", "topology_pipeline", "strategy_matrix"]
+#: and the sketch-vs-exact stats A/B (which asserts its theta-quality
+#: contract per shape)
+SMOKE_MODULES = ["fig16_tpch", "topology_pipeline", "strategy_matrix",
+                 "sketch_scaling"]
 
 
 def main() -> None:

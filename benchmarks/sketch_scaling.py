@@ -1,0 +1,266 @@
+"""Sketch-mode controller A/B: full interval-cycle wall time, exact vs sketch.
+
+Times one complete controller interval cycle in both stats modes, exactly
+as the stream engine drives them (``repro.streams.backends.collect_stats``):
+
+* **exact** — materialize the O(K) ``KeyStats`` from raw per-interval
+  arrays (``np.union1d`` over seen ∪ held keys, segment sums for
+  cost/freq/mem) and run the O(K) plan round on it;
+* **sketch** — fold the same raw arrays through ``ingest`` (activity batch
+  + zero-cost state-size batch), then close the interval with
+  ``on_interval(None)``: an O(head) snapshot and plan round.
+
+Two point sets, with contracts *asserted per point*, not just reported:
+
+* **quality points** — the strategy-matrix workload shapes (zipf / hot /
+  drift) at K <= 1e5: both modes' resulting assignments are scored against
+  the same exact stats, and the sketch plan's theta must be within 10% of
+  the exact plan's (plus a 0.02 absolute floor for near-zero thetas).
+  These shapes are plan-churn-bound by design (their theta floors sit far
+  above ``theta_max``), which is what makes them quality probes — and why
+  they are not speed probes;
+* **scale points** — a feasible large-domain shape (z=0.9, f=1.0,
+  theta_max=0.02) at K >= 1e6, where the interval cycle is dominated by
+  stats work and the O(K)-vs-O(head) separation is what's being measured.
+  The sketch cycle must be >= 5x faster (``REPRO_SKETCH_AB_MIN``
+  overrides, for constrained CI runners), and resident sketch-stats bytes
+  must stay under an absolute O(H + sketch) cap at every K plus under 1/5
+  of the exact per-key arrays once those dominate.
+
+Run directly for JSON output:
+
+    PYTHONPATH=src:. python benchmarks/sketch_scaling.py [--smoke|--full] [--out f]
+
+or via the harness: ``python benchmarks/run.py --only sketch_scaling``.
+The committed CI baseline (``benchmarks/sketch_scaling.json``) is
+generated with the default sweep, a superset of the --smoke points
+(see check_perf_gate.py --sketch-fresh/--sketch-baseline).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+import time
+from typing import List, Optional
+
+import numpy as np
+
+from repro.core import RebalanceController
+from repro.core.balancer import (Assignment, BalanceConfig, KeyStats, ModHash,
+                                 SketchConfig, metrics, mixed)
+from repro.streams.generator import WorkloadGen
+
+#: quality probes: the strategy-matrix shapes (zipf exponent / fluctuation
+#: rate), gated on plan theta at K <= THETA_K
+QUALITY_SHAPES = [
+    ("zipf", dict(z=1.1, f=0.8), 0.08),
+    ("hot", dict(z=2.0, f=0.8), 0.08),
+    ("drift", dict(z=1.1, f=2.5), 0.08),
+]
+
+#: speed probe: feasible balance at huge K — the regime the sketch exists
+#: for, where the interval cycle is stats-bound rather than churn-bound
+SCALE_SHAPE = ("scale", dict(z=0.9, f=1.0), 0.02)
+
+N_DEST = 15
+WINDOW = 2
+TABLE_MAX = 3_000
+
+#: sketch cycle must beat exact by this factor at K >= SPEEDUP_K
+SPEEDUP_K = 1_000_000
+SPEEDUP_MIN = float(os.environ.get("REPRO_SKETCH_AB_MIN", "5"))
+
+#: sketch plan theta <= THETA_RTOL * exact theta + THETA_ATOL, asserted up
+#: to THETA_K (above it the fixed-capacity head tracks a shrinking mass
+#: fraction, so the quality contract is only reported, not gated)
+THETA_RTOL = 1.10
+THETA_ATOL = 0.02
+THETA_K = 100_000
+
+#: resident sketch-stats bytes must stay under this at EVERY K (O(H+sketch),
+#: not O(K)) and under exact/MEM_RATIO once the exact arrays dominate
+MEM_ABS_CAP = 16 << 20
+MEM_RATIO = 5
+
+
+def _instance(shape_cfg: dict, theta_max: float, k: int, seed: int = 0):
+    """Warmed instance: one exact mixed solve builds a realistic table, one
+    fluctuation step produces the interval both modes are timed on."""
+    gen = WorkloadGen(k=k, seed=seed, window=WINDOW, **shape_cfg)
+    assignment = Assignment(ModHash(N_DEST, seed=seed))
+    cfg = BalanceConfig(theta_max=theta_max, table_max=TABLE_MAX,
+                        window=WINDOW)
+    stats = gen.interval(assignment, fluctuate=False)
+    assignment = mixed(stats, assignment, cfg).assignment
+    return gen.interval(assignment), assignment, cfg
+
+
+def _fresh(assignment: Assignment) -> Assignment:
+    return dataclasses.replace(assignment, table=dict(assignment.table))
+
+
+def _exact_cycle(ctrl: RebalanceController, stats: KeyStats):
+    """The exact engine interval: collect_stats' seen ∪ held fold, then the
+    O(K) controller round on the materialized KeyStats."""
+    seen, held = stats.keys, stats.keys
+    universe = np.union1d(seen, held)
+    pos = np.searchsorted(universe, seen)
+    cost = metrics.segment_sum(stats.cost, pos, universe.size)
+    freq = metrics.segment_sum(stats.freq, pos, universe.size)
+    mem = metrics.segment_sum(stats.mem, np.searchsorted(universe, held),
+                              universe.size)
+    return ctrl.on_interval(
+        KeyStats(keys=universe, cost=cost, mem=mem, freq=freq), force=True)
+
+
+def _sketch_cycle(ctrl: RebalanceController, stats: KeyStats):
+    """The sketch engine interval: activity ingest + zero-cost state-size
+    ingest, then the O(head) round (snapshot + trigger + plan)."""
+    ctrl.ingest(stats.keys, stats.cost, freq=stats.freq)
+    ctrl.ingest(stats.keys, np.zeros(stats.keys.size), mem=stats.mem)
+    return ctrl.on_interval(None, force=True)
+
+
+def _cycle(mode: str, stats, assignment, cfg, repeats: int):
+    """Best-of-N full interval cycles; returns (seconds, event, ctrl)."""
+    run_one = _exact_cycle if mode == "exact" else _sketch_cycle
+    best, ev, ctrl = float("inf"), None, None
+    for _ in range(repeats):
+        c = RebalanceController(
+            _fresh(assignment), cfg, algorithm="mixed", stats_mode=mode,
+            sketch=SketchConfig() if mode == "sketch" else None)
+        t0 = time.perf_counter()
+        e = run_one(c, stats)
+        dt = time.perf_counter() - t0
+        if dt < best:
+            best, ev, ctrl = dt, e, c
+    return best, ev, ctrl
+
+
+def _exact_stats_bytes(stats) -> int:
+    arrs = (stats.keys, stats.cost, stats.mem, stats.freq)
+    return int(sum(a.nbytes for a in arrs if a is not None))
+
+
+def _sketch_resident_bytes(ctrl) -> int:
+    snap = ctrl.last_stats
+    snap_bytes = _exact_stats_bytes(snap) if snap is not None else 0
+    return int(ctrl.sketch.nbytes) + snap_bytes
+
+
+def run(ks: Optional[List[int]] = None, full: bool = False,
+        smoke: bool = False) -> dict:
+    if ks is None:
+        if smoke:
+            ks = [100_000]
+        elif full:
+            ks = [100_000, 1_000_000, 10_000_000]
+        else:
+            ks = [100_000, 1_000_000]
+    series: List[dict] = []
+    failures: List[str] = []
+    points = []
+    for k in sorted(set(ks)):
+        if k <= THETA_K:
+            points.extend((shape, cfg, th, k)
+                          for shape, cfg, th in QUALITY_SHAPES)
+        else:
+            shape, cfg, th = SCALE_SHAPE
+            points.append((shape, cfg, th, k))
+    for shape, shape_cfg, theta_max, k in points:
+        stats, assignment, cfg = _instance(shape_cfg, theta_max, k)
+        repeats = 3 if k <= 100_000 else 2
+        t_e, ev_e, _ = _cycle("exact", stats, assignment, cfg, repeats)
+        t_s, ev_s, ctrl_s = _cycle("sketch", stats, assignment, cfg, repeats)
+        # score BOTH plans against the same exact stats
+        th_e = metrics.theta_for(stats, ev_e.result.assignment)
+        th_s = metrics.theta_for(stats, ev_s.result.assignment)
+        mem_exact = _exact_stats_bytes(stats)
+        mem_sketch = _sketch_resident_bytes(ctrl_s)
+        speedup = t_e / t_s if t_s > 0 else float("inf")
+        point = dict(shape=shape, k=k)
+        series.append({**point, "mode": "exact", "seconds": t_e,
+                       "theta": th_e, "stats_bytes": mem_exact,
+                       "table_size": ev_e.result.table_size})
+        series.append({**point, "mode": "sketch", "seconds": t_s,
+                       "theta": th_s, "stats_bytes": mem_sketch,
+                       "table_size": ev_s.result.table_size,
+                       "head_keys": int(ctrl_s.last_stats.keys.size),
+                       "speedup_vs_exact": speedup})
+        if k <= THETA_K and th_s > THETA_RTOL * th_e + THETA_ATOL:
+            failures.append(
+                f"{shape}/k={k}: sketch theta {th_s:.4f} vs exact "
+                f"{th_e:.4f} breaches {THETA_RTOL}x + {THETA_ATOL}")
+        if k >= SPEEDUP_K and speedup < SPEEDUP_MIN:
+            failures.append(
+                f"{shape}/k={k}: sketch cycle {speedup:.2f}x vs exact, "
+                f"needs >= {SPEEDUP_MIN}x")
+        if mem_sketch > MEM_ABS_CAP:
+            failures.append(
+                f"{shape}/k={k}: sketch resident {mem_sketch} B > "
+                f"absolute cap {MEM_ABS_CAP} B")
+        if k >= SPEEDUP_K and mem_sketch > mem_exact / MEM_RATIO:
+            failures.append(
+                f"{shape}/k={k}: sketch resident {mem_sketch} B > "
+                f"exact/{MEM_RATIO} ({mem_exact // MEM_RATIO} B)")
+    return {"ks": ks, "theta_rtol": THETA_RTOL, "theta_atol": THETA_ATOL,
+            "speedup_min": SPEEDUP_MIN, "speedup_k": SPEEDUP_K,
+            "series": series, "failures": failures, "ok": not failures}
+
+
+def rows(quick: bool = True):
+    """run.py harness adapter (smoke-sized: K=1e5, all quality shapes)."""
+    r = run(smoke=True) if quick else run()
+    out = []
+    by_point = {}
+    for s in r["series"]:
+        by_point.setdefault((s["shape"], s["k"]), {})[s["mode"]] = s
+    for (shape, k), modes in sorted(by_point.items()):
+        for mode, s in sorted(modes.items()):
+            out.append((f"sketch_scaling/{shape}/k{k}/{mode}",
+                        s["seconds"] * 1e6,
+                        f"theta={s['theta']:.4f};"
+                        f"bytes={s['stats_bytes']}"))
+        if "sketch" in modes:
+            out.append((f"sketch_scaling/{shape}/k{k}/speedup", 0.0,
+                        f"{modes['sketch']['speedup_vs_exact']:.1f}x;"
+                        f"ok={r['ok']}"))
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="K=1e5 only (CI): theta-quality contract on all "
+                         "shapes in seconds of wall time")
+    ap.add_argument("--full", action="store_true",
+                    help="extend the sweep to K=1e7")
+    ap.add_argument("--out", default=None,
+                    help="write JSON here instead of stdout")
+    ap.add_argument("--ks", default=None,
+                    help="comma-separated explicit K sweep (overrides "
+                         "--smoke/--full)")
+    args = ap.parse_args()
+    ks = ([int(x) for x in args.ks.split(",")] if args.ks else None)
+    t0 = time.time()
+    result = run(ks=ks, full=args.full, smoke=args.smoke)
+    result["wall_s"] = time.time() - t0
+    blob = json.dumps(result, indent=2)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(blob + "\n")
+        print(f"wrote {args.out}: ok={result['ok']}", file=sys.stderr)
+    else:
+        print(blob)
+    if not result["ok"]:
+        for msg in result["failures"]:
+            print(f"QUALITY FAILURE: {msg}", file=sys.stderr)
+    sys.exit(0 if result["ok"] else 1)
+
+
+if __name__ == "__main__":
+    main()

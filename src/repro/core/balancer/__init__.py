@@ -26,6 +26,8 @@ from .compact import compact_mixed, build_groups
 from .discretize import discretize, hlhe_representatives, total_deviation
 from .reference import (REFERENCE_ALGORITHMS, reference_mintable,
                         reference_minmig, reference_mixed, reference_mixed_bf)
+from .sketch import (CountMinSketch, SketchConfig, SketchStats,
+                     SpaceSavingTracker)
 from .strategy import (ALGORITHMS, ChoiceRouter, PartialKeyGrouping,
                        PartitionStrategy, PowerOfBothChoices, TablePlanner,
                        WChoices, _register_planner, register_strategy,
@@ -57,6 +59,7 @@ __all__ = [
     "total_deviation", "ALGORITHMS", "REFERENCE_ALGORITHMS",
     "reference_mintable", "reference_minmig", "reference_mixed",
     "reference_mixed_bf",
+    "CountMinSketch", "SketchConfig", "SketchStats", "SpaceSavingTracker",
     "PartitionStrategy", "TablePlanner", "ChoiceRouter",
     "PartialKeyGrouping", "PowerOfBothChoices", "WChoices",
     "register_strategy", "resolve_strategy", "strategy_names",

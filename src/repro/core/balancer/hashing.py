@@ -16,6 +16,12 @@ from .types import HashRouter
 
 _U64 = np.uint64
 
+#: seed spacing used wherever a family of independent Hash32 draws is needed
+#: (choice-router candidates, count-min sketch rows): golden-ratio odd
+#: constant — fmix32 decorrelates any two seeds, this just keeps them
+#: distinct per row/candidate index.
+GOLDEN_SEED_STRIDE = 0x9E3779B9
+
 
 def splitmix64(x: np.ndarray, seed: int = 0x9E3779B97F4A7C15) -> np.ndarray:
     """Vectorized splitmix64 finalizer. uint64 in, uint64 out."""

@@ -51,6 +51,7 @@ from typing import List, Optional
 
 import numpy as np
 
+from . import metrics
 from .types import Assignment, BalanceConfig, KeyStats
 
 IN_CANDIDATES = -1
@@ -75,7 +76,12 @@ class PlannerContext:
         self.mem = stats.mem
         # psi: priority used for Phase II selection and Adjust's E (higher first)
         self.psi = self.cost if psi is None else np.asarray(psi, dtype=np.float64)
-        self.mean_load = float(np.sum(self.cost)) / self.n_dest
+        # sketch-mode stats carry frozen tail cost as per-dest base loads
+        # (see balancer/sketch.py); they count toward the mean and sit under
+        # every destination's working load but never enter the candidate set.
+        self.base = metrics.base_for(stats, self.n_dest)
+        base_sum = 0.0 if self.base is None else float(self.base.sum())
+        self.mean_load = (float(np.sum(self.cost)) + base_sum) / self.n_dest
         k = stats.num_keys
         frac = config.head_fraction
         if frac > 0.0:
@@ -118,6 +124,8 @@ class Workspace:
         self.assign = ctx.orig_dest.copy()                       # working F'(k)
         self.loads = np.bincount(self.assign, weights=ctx.cost,
                                  minlength=ctx.n_dest).astype(np.float64)
+        if ctx.base is not None:
+            self.loads += ctx.base
         self.candidates: List[tuple] = []   # max-heap of (-cost, idx)
         # per-dest member ranks (sorted asc) + append buffers, built lazily:
         # Phase I mutates `assign` wholesale, so membership is materialized
@@ -189,6 +197,8 @@ class Workspace:
         self.loads = np.bincount(self.assign[self.assign >= 0],
                                  weights=self.ctx.cost[self.assign >= 0],
                                  minlength=self.ctx.n_dest).astype(np.float64)
+        if self.ctx.base is not None:
+            self.loads += self.ctx.base
 
     def move_back(self, idx: int) -> None:
         """Scalar Phase-I move (kept for API parity with the oracle)."""

@@ -2,6 +2,8 @@
 
 from __future__ import annotations
 
+from typing import Optional
+
 import numpy as np
 
 from .types import Assignment, KeyStats
@@ -19,9 +21,32 @@ def segment_sum(values: np.ndarray, segment_ids: np.ndarray,
                        minlength=n_segments).astype(np.float64)
 
 
+def base_for(stats: KeyStats, n_dest: int) -> Optional[np.ndarray]:
+    """The stats' frozen tail base loads sized to ``n_dest`` (or None).
+
+    Sketch-mode stats (``balancer/sketch.py``) carry per-destination cost
+    for tail keys absent from the per-key arrays. A rescale can briefly
+    hand an ``n_dest`` differing from the snapshot's: pad with zeros on
+    grow; truncate on shrink (the next interval's ingest re-derives the
+    totals under the new fleet).
+    """
+    base = stats.base_loads
+    if base is None:
+        return None
+    if base.size < n_dest:
+        return np.concatenate([base, np.zeros(n_dest - base.size)])
+    if base.size > n_dest:
+        return base[:n_dest]
+    return base
+
+
 def loads_for(stats: KeyStats, dests: np.ndarray, n_dest: int) -> np.ndarray:
-    """L(d) = sum of c(k) over keys assigned to d."""
-    return segment_sum(stats.cost, dests, n_dest)
+    """L(d) = sum of c(k) over keys assigned to d (+ frozen tail base)."""
+    out = segment_sum(stats.cost, dests, n_dest)
+    base = base_for(stats, n_dest)
+    if base is not None:
+        out = out + base
+    return out
 
 
 def loads(stats: KeyStats, assignment: Assignment) -> np.ndarray:

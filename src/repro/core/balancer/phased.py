@@ -43,6 +43,8 @@ def finish(ws, assignment: Assignment, config: BalanceConfig,
     maintained estimate, so the array-native planner and the scalar oracle
     report bit-identical loads/theta regardless of their internal float
     accumulation order. Works for both Workspace implementations.
+    ``loads_for`` folds in any frozen tail base loads (sketch-mode stats),
+    so the reported loads/theta cover the whole stream, not just the head.
     """
     table = ws.result_table()
     new = Assignment(assignment.hash_router, table)

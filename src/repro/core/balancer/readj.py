@@ -32,7 +32,12 @@ def readj(stats: KeyStats, assignment: Assignment, config: BalanceConfig,
     assign = assignment.dest(stats.keys).copy()
     cost = stats.cost
     loads = np.bincount(assign, weights=cost, minlength=n_dest).astype(np.float64)
-    mean = float(np.sum(cost)) / n_dest
+    base = metrics.base_for(stats, n_dest)   # frozen tail (sketch-mode stats)
+    base_sum = 0.0
+    if base is not None:
+        loads += base
+        base_sum = float(base.sum())
+    mean = (float(np.sum(cost)) + base_sum) / n_dest
     l_max = config.l_max(mean)
 
     heavy = np.flatnonzero(cost >= sigma * mean)     # "big load keys" only

@@ -55,16 +55,17 @@ from typing import Callable, Dict, Optional, Tuple
 
 import numpy as np
 
-from .hashing import Hash32
+from .hashing import GOLDEN_SEED_STRIDE, Hash32
 from .types import Assignment, BalanceConfig, KeyStats, RebalanceResult
 
 #: name -> zero-arg factory returning a fresh strategy instance. Mutated only
 #: through :func:`register_strategy` / :func:`_register_planner`.
 STRATEGIES: Dict[str, Callable[[], "PartitionStrategy"]] = {}
 
-#: seed spacing between the d candidate hashes (golden-ratio odd constant;
-#: fmix32 decorrelates any two seeds, this just keeps them distinct per j)
-_CHOICE_SEED_STRIDE = 0x9E3779B9
+#: seed spacing between the d candidate hashes — the shared golden-ratio
+#: constant (hashing.GOLDEN_SEED_STRIDE), also used by the count-min sketch
+#: rows so routers and sketches draw from one decorrelated seed family
+_CHOICE_SEED_STRIDE = GOLDEN_SEED_STRIDE
 
 
 def register_strategy(factory):
@@ -361,16 +362,30 @@ class WChoices(ChoiceRouter):
     keys — frequency share >= ``head_threshold`` in the last interval's
     stats — route over ALL W workers while the tail keeps PKG's two. The
     head set refreshes from the controller's step-1 measurement each
-    interval (the paper estimates heavy hitters the same way); before the
-    first interval it is empty and the router behaves exactly like PKG."""
+    interval; heavy hitters are estimated through the same
+    :class:`~repro.core.balancer.sketch.SpaceSavingTracker` the sketch-mode
+    planners use (the paper estimates them with a SpaceSaving sketch too),
+    so routers and planners identify the head identically. With
+    ``head_capacity`` at least the number of distinct keys the tracker
+    never truncates and the head is the exact threshold set; the default
+    capacity guarantees every key at or above the threshold share is
+    captured with a 4x margin (capture needs capacity+1 >= 1/threshold).
+    Before the first interval the head is empty and the router behaves
+    exactly like PKG."""
 
     name = "wchoices"
 
-    def __init__(self, head_threshold: float = 0.01, **kwargs):
+    def __init__(self, head_threshold: float = 0.01,
+                 head_capacity: Optional[int] = None, **kwargs):
         super().__init__(**kwargs)
         if not 0.0 < head_threshold <= 1.0:
             raise ValueError("head_threshold must be in (0, 1]")
         self.head_threshold = float(head_threshold)
+        if head_capacity is None:
+            head_capacity = max(4096, int(np.ceil(4.0 / self.head_threshold)))
+        if head_capacity < 1:
+            raise ValueError("head_capacity must be >= 1")
+        self.head_capacity = int(head_capacity)
         self._head = np.zeros(0, dtype=np.int64)    # sorted head key ids
 
     def bind(self, assignment: Assignment) -> None:
@@ -382,12 +397,17 @@ class WChoices(ChoiceRouter):
         return self._head
 
     def on_stats(self, stats: KeyStats) -> None:
+        from .sketch import SpaceSavingTracker
         weight = stats.freq if stats.freq is not None else stats.cost
         total = float(weight.sum())
         if total <= 0.0:
             self._head = np.zeros(0, dtype=np.int64)
             return
-        self._head = np.sort(stats.keys[weight >= self.head_threshold * total])
+        tracker = SpaceSavingTracker(self.head_capacity)
+        tracker.update(stats.keys, weight)
+        est = tracker.estimate(tracker.keys)    # upper bound: no head missed
+        self._head = np.sort(
+            tracker.keys[est >= self.head_threshold * tracker.total])
 
     def _candidate_matrix(self, uk: np.ndarray
                           ) -> Tuple[np.ndarray, np.ndarray]:

@@ -27,12 +27,21 @@ class KeyStats:
       * ``freq[k]``  = g_{i-1}(k)   tuple frequency
       * ``cost[k]``  = c_{i-1}(k)   computation cost (CPU-seconds / chip-FLOPs)
       * ``mem[k]``   = S_{i-1}(k,w) windowed state size (bytes)
+
+    ``base_loads`` (optional, sketch-mode stats — see ``balancer/sketch.py``)
+    carries per-destination cost that belongs to *tail* keys not present in
+    the per-key arrays: those keys are frozen on their hash destinations
+    (the ``head_fraction`` head/tail contract), and every load/theta
+    computation folds the base in (``metrics.loads_for``,
+    ``PlannerContext.mean_load``). ``None`` (the default) means the per-key
+    arrays are the whole universe — exact pre-sketch behavior.
     """
 
     keys: Array                    # (K,) int64 unique key ids
     cost: Array                    # (K,) float64
     mem: Array                     # (K,) float64
     freq: Optional[Array] = None   # (K,) float64, optional
+    base_loads: Optional[Array] = None  # (n_dest,) float64, optional
 
     def __post_init__(self) -> None:
         self.keys = np.asarray(self.keys, dtype=np.int64)
@@ -40,6 +49,10 @@ class KeyStats:
         self.mem = np.asarray(self.mem, dtype=np.float64)
         if self.freq is not None:
             self.freq = np.asarray(self.freq, dtype=np.float64)
+        if self.base_loads is not None:
+            self.base_loads = np.asarray(self.base_loads, dtype=np.float64)
+            if self.base_loads.ndim != 1:
+                raise ValueError("base_loads must be a 1-D (n_dest,) array")
         if self.keys.shape != self.cost.shape or self.keys.shape != self.mem.shape:
             raise ValueError("KeyStats arrays must have identical shapes")
 

@@ -47,11 +47,27 @@ MigrationExecutor = Callable[[np.ndarray, Assignment, Assignment], None]
 
 
 class RebalanceController:
-    """Owns the assignment function F and updates it at interval boundaries."""
+    """Owns the assignment function F and updates it at interval boundaries.
+
+    ``stats_mode`` selects how step-1 measurement reaches the planner:
+
+    * ``"exact"`` (default) — callers hand over full per-key
+      :class:`KeyStats`; O(K) per round, bit-exact (pre-sketch behavior).
+    * ``"sketch"`` — callers stream batches through :meth:`ingest`
+      (count-min sketch + SpaceSaving head tracker + exact per-dest
+      totals, see :mod:`repro.core.balancer.sketch`) and close the round
+      with ``on_interval(None)``; the planner then runs on a head-only
+      snapshot whose ``base_loads`` freeze the tail on its hash
+      destinations — O(H + sketch) memory and O(H) plan time regardless
+      of the key domain. The trigger's theta stays exact (head estimate
+      errors cancel against the derived base loads, up to clipping).
+    """
 
     def __init__(self, assignment: Assignment, config: BalanceConfig,
                  algorithm="mixed",
-                 executor: Optional[MigrationExecutor] = None):
+                 executor: Optional[MigrationExecutor] = None,
+                 stats_mode: str = "exact",
+                 sketch: Optional["SketchConfig"] = None):
         self.assignment = assignment
         self.config = config
         self.executor = executor
@@ -63,6 +79,27 @@ class RebalanceController:
         #: caches on it so unchanged assignments skip the rebuild/re-upload
         #: (see KeyedStage._dest_batch).
         self.assignment_version = 0
+        #: the stats the last protocol round actually planned on (exact or
+        #: sketch snapshot) — what ``KeyedStage.last_stats``/``scale_to``
+        #: consume in sketch mode.
+        self.last_stats: Optional[KeyStats] = None
+        if stats_mode not in ("exact", "sketch"):
+            raise ValueError(f"unknown stats_mode {stats_mode!r}; "
+                             "choose 'exact' or 'sketch'")
+        self.stats_mode = stats_mode
+        self._sketch: Optional["SketchStats"] = None
+        if stats_mode == "sketch":
+            from .balancer.sketch import SketchConfig, SketchStats
+            cfg = sketch if sketch is not None else SketchConfig()
+            seed = int(getattr(assignment.hash_router, "seed", 0))
+            self._sketch = SketchStats(cfg, assignment.n_dest, seed=seed)
+        elif sketch is not None:
+            raise ValueError("sketch= config requires stats_mode='sketch'")
+
+    @property
+    def sketch(self) -> Optional["SketchStats"]:
+        """The live :class:`SketchStats` instance (sketch mode only)."""
+        return self._sketch
 
     def use_algorithm(self, algorithm) -> None:
         """Install an ``algorithm=`` spec: a registered strategy name, a bare
@@ -105,21 +142,60 @@ class RebalanceController:
         any substrate whose workers already aggregate on-device, e.g. the
         ``key_stats`` Pallas kernel): callers hand over ``c(k)``/``S(k,w)``/
         ``g(k)`` arrays directly instead of building a :class:`KeyStats`
-        themselves. Equivalent to ``on_interval(KeyStats(...), force)``.
+        themselves. Equivalent to ``on_interval(KeyStats(...), force)`` —
+        in sketch mode the arrays fold through :meth:`ingest` instead and
+        the round plans on the head-only snapshot.
         """
+        if self._sketch is not None:
+            self.ingest(keys, cost, mem=mem, freq=freq)
+            return self.on_interval(None, force=force, interval=interval)
         return self.on_interval(
             KeyStats(keys=keys, cost=cost, mem=mem, freq=freq), force=force,
             interval=interval)
 
+    def ingest(self, keys: np.ndarray, cost: np.ndarray,
+               mem: Optional[np.ndarray] = None,
+               freq: Optional[np.ndarray] = None) -> None:
+        """Sketch-mode streaming step-1 fold (any number of calls per
+        interval; batches may repeat keys — everything accumulates).
+
+        Destinations are resolved through the *current* assignment, which
+        is constant within an interval (F only changes at interval
+        boundaries), so the exact per-destination totals the trigger uses
+        line up with where the tuples actually ran.
+        """
+        if self._sketch is None:
+            raise ValueError("ingest() requires stats_mode='sketch'")
+        keys = np.asarray(keys, dtype=np.int64)
+        if not keys.size:
+            return
+        cost = np.asarray(cost, dtype=np.float64)
+        # an all-zero-cost batch (the end-of-interval state-size fold)
+        # contributes nothing per destination — skip the O(K) dest resolve
+        dests = self.assignment.dest(keys) if cost.any() else None
+        self._sketch.update(keys, dests, cost, mem=mem, freq=freq)
+
     # -- paper steps 2-7 ------------------------------------------------------
-    def on_interval(self, stats: KeyStats, force: bool = False,
+    def on_interval(self, stats: Optional[KeyStats], force: bool = False,
                     interval: Optional[int] = None) -> ControllerEvent:
         """One protocol round. ``interval`` pins the recorded event to the
         caller's interval clock (the stream engine passes its own counter so
         ControllerEvent.interval stays aligned even when some intervals
         produce no stats and skip the controller entirely); None keeps the
-        self-incrementing counter for callers without one."""
+        self-incrementing counter for callers without one.
+
+        ``stats=None`` closes a sketch-mode interval: the round plans on
+        the ingested data's head-only snapshot and the sketch resets for
+        the next interval. Passing explicit stats works in either mode
+        (e.g. ``derate_worker`` hands in a doctored copy)."""
         self._interval = self._interval + 1 if interval is None else interval
+        if stats is None:
+            if self._sketch is None:
+                raise ValueError(
+                    "on_interval(None) requires stats_mode='sketch'")
+            stats = self._sketch.snapshot(self.assignment)
+            self._sketch.end_interval()
+        self.last_stats = stats
         if self.strategy.is_router:
             # choice routers balance per tuple and never produce a plan: the
             # interval boundary is measurement only. theta reflects the

@@ -61,7 +61,7 @@ import numpy as np
 from repro.core.balancer import Assignment, KeyStats, metrics
 from repro.core.controller import RebalanceController
 
-from .backends import resolve_backend
+from .backends import SKETCH_PENDING, resolve_backend
 from .operators import Operator
 
 SUBSTRATES = ("numpy", "pallas")
@@ -343,11 +343,17 @@ class KeyedStage:
         self._migrated_bytes_pending = 0.0
         self._plan_time_pending = 0.0
         if stats is not None:
-            self.last_stats = stats
             # pin the event to the STAGE interval: a stats-free interval
             # (no tuples, no held state) skips the controller, and its
             # private counter would silently lag the stage clock otherwise
-            ev = self.controller.on_interval(stats, interval=iv)
+            if stats is SKETCH_PENDING:
+                # the backend streamed aggregates into the controller's
+                # sketch; close the round on the head-only snapshot
+                ev = self.controller.on_interval(None, interval=iv)
+                self.last_stats = self.controller.last_stats
+            else:
+                self.last_stats = stats
+                ev = self.controller.on_interval(stats, interval=iv)
             if ev.result is not None:
                 self._plan_time_pending = ev.result.plan_time_s
         return report
@@ -447,6 +453,13 @@ class KeyedStage:
                            dtype=np.float64)
         mem = np.fromiter((sizes.get(int(k), 0.0) for k in keys),
                           dtype=np.float64)
+        if self.controller.stats_mode == "sketch":
+            # the reference loop is dict-based (it materializes the exact
+            # universe anyway), but in sketch mode it still hands off
+            # through the sketch so the controller plans on the same
+            # head-only contract as the vectorized backends
+            self.controller.ingest(keys, cost, mem=mem, freq=freq)
+            return SKETCH_PENDING
         return KeyStats(keys=keys, cost=cost, mem=mem, freq=freq)
 
     # -- elastic scaling (paper Fig. 15) ----------------------------------------

@@ -88,7 +88,9 @@ def keyed_stage(operator: Operator, n_tasks: int, theta_max: float, *,
                 substrate: str = "numpy", state_backend: str = "auto",
                 n_shards: Optional[int] = None,
                 kernel_interpret: Optional[bool] = None,
-                migration_bandwidth: float = 1e6) -> KeyedStage:
+                migration_bandwidth: float = 1e6,
+                stats_mode: str = "exact",
+                sketch=None) -> KeyedStage:
     """Convenience constructor: one stage = operator + fresh controller fleet.
 
     Every call builds an independent ``Assignment``/``RebalanceController``
@@ -112,12 +114,20 @@ def keyed_stage(operator: Operator, n_tasks: int, theta_max: float, *,
     Router strategies split keys across tasks, so the operator must be
     ``split_safe`` (pair e.g. ``PartialWordCount`` with a downstream
     ``WordCount`` merge stage — see :func:`router_merge_topology`).
+
+    ``stats_mode``/``sketch`` pass straight through to
+    :class:`~repro.core.controller.RebalanceController`: ``"sketch"``
+    streams step-1 measurement through a count-min sketch + SpaceSaving
+    head tracker (O(H + sketch) controller memory instead of O(K) — see
+    ``repro.core.balancer.sketch``), with ``sketch=`` an optional
+    :class:`~repro.core.balancer.sketch.SketchConfig`.
     """
     controller = RebalanceController(
         Assignment(hash_cls(n_tasks, seed=seed)),
         BalanceConfig(theta_max=theta_max, table_max=table_max,
                       window=window),
-        algorithm=algorithm)
+        algorithm=algorithm,
+        stats_mode=stats_mode, sketch=sketch)
     return KeyedStage(operator, controller, window=window,
                       vectorized=vectorized, substrate=substrate,
                       state_backend=state_backend, n_shards=n_shards,

@@ -1,0 +1,175 @@
+"""Property-based tests (hypothesis) for the sketch stats guarantees.
+
+The three ISSUE-level contracts, asserted over randomized streams:
+
+* count-min never underestimates and overestimates by at most the
+  colliding mass (``<= N / 256`` at width 4096 x depth 4 on <= 64 keys —
+  in practice exact, the bound is generous);
+* SpaceSaving: estimates are upper bounds with error ``<= N / (H + 1)``,
+  and every key with true weight ``> N / H`` is tracked;
+* head-key stats with ``err == 0`` are bit-identical to exact dict
+  counting — the invariant that lets sketch-mode planners treat the head
+  as exact — on zipf and drifting streams fed in engine-sized chunks.
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")   # optional [test] extra
+from hypothesis import given, settings, strategies as st
+
+from repro.core.balancer import (Assignment, CountMinSketch, ModHash,
+                                 SketchConfig, SketchStats,
+                                 SpaceSavingTracker)
+
+
+# ---------------------------------------------------------------------------
+# stream generators
+# ---------------------------------------------------------------------------
+
+@st.composite
+def zipf_streams(draw):
+    seed = draw(st.integers(0, 2**31 - 1))
+    k = draw(st.integers(50, 2_000))
+    z = draw(st.sampled_from([1.1, 1.3, 1.8]))
+    n = draw(st.integers(1_000, 20_000))
+    rng = np.random.default_rng(seed)
+    keys = (rng.zipf(z, size=n) % k).astype(np.int64)
+    weights = rng.integers(1, 8, size=n).astype(np.float64)
+    return keys, weights, seed
+
+
+@st.composite
+def drift_streams(draw):
+    """Two zipf phases over shifted key ranges — the fluctuation shape."""
+    seed = draw(st.integers(0, 2**31 - 1))
+    k = draw(st.integers(100, 1_000))
+    n = draw(st.integers(2_000, 10_000))
+    rng = np.random.default_rng(seed)
+    a = (rng.zipf(1.3, size=n // 2) % k).astype(np.int64)
+    b = ((rng.zipf(1.3, size=n - n // 2) % k) + k // 3).astype(np.int64)
+    keys = np.concatenate([a, b])
+    weights = np.ones(keys.size)
+    return keys, weights, seed
+
+
+def _chunks(arr, size=1_500):
+    for lo in range(0, arr.shape[0], size):
+        yield slice(lo, lo + size)
+
+
+def _true_counts(keys, weights):
+    uk, inv = np.unique(keys, return_inverse=True)
+    return uk, np.bincount(inv, weights=weights)
+
+
+# ---------------------------------------------------------------------------
+# count-min
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 64), st.integers(100, 5_000))
+def test_cms_bounds(seed, n_keys, n_tuples):
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, n_keys, size=n_tuples).astype(np.int64)
+    weights = rng.integers(1, 10, size=n_tuples).astype(np.float64)
+    cms = CountMinSketch(4_096, 4, seed=seed % 97)
+    for sl in _chunks(keys):
+        cms.update(keys[sl], cost=weights[sl])
+    uk, true = _true_counts(keys, weights)
+    est = cms.query(uk, "cost")
+    total = float(weights.sum())
+    assert np.all(est >= true - 1e-9)                 # never underestimates
+    assert np.all(est - true <= total / 256 + 1e-9)   # eps * N
+
+
+# ---------------------------------------------------------------------------
+# SpaceSaving
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(zipf_streams(), st.sampled_from([8, 32]))
+def test_spacesaving_bounds(stream, capacity):
+    keys, weights, _ = stream
+    tr = SpaceSavingTracker(capacity)
+    for sl in _chunks(keys):
+        tr.update(keys[sl], weights[sl])
+    uk, true = _true_counts(keys, weights)
+    total = float(weights.sum())
+    assert tr.total == pytest.approx(total)
+    assert len(tr) <= capacity
+    assert tr.offset <= total / (capacity + 1) + 1e-9
+    est = tr.estimate(uk)
+    assert np.all(est >= true - 1e-9)                 # upper bound
+    assert np.all(est - true <= tr.offset + 1e-9)     # error <= offset
+    heavy = uk[true > total / capacity]               # every hitter captured
+    assert np.isin(heavy, tr.keys).all()
+
+
+# ---------------------------------------------------------------------------
+# head-key exactness through the full adapter
+# ---------------------------------------------------------------------------
+
+def _assert_exact_head(keys, weights, seed, capacity):
+    assignment = Assignment(ModHash(7, seed=seed % 13))
+    ss = SketchStats(SketchConfig(width=1 << 13, depth=4, capacity=capacity),
+                     assignment.n_dest, seed=seed % 1_000)
+    mem = np.ones(keys.size)
+    for sl in _chunks(keys):
+        ss.update(keys[sl], assignment.dest(keys[sl]), weights[sl],
+                  mem=mem[sl], freq=mem[sl])
+    uk, true_cost = _true_counts(keys, weights)
+    _, true_freq = _true_counts(keys, np.ones(keys.size))
+    snap = ss.snapshot(assignment)
+    # exact-mask entries are bit-identical to dict counting
+    tr = ss.tracker
+    exact_keys = tr.keys[tr.exact_mask]
+    if exact_keys.size:
+        in_true = np.searchsorted(uk, exact_keys)
+        in_snap = np.searchsorted(snap.keys, exact_keys)
+        np.testing.assert_array_equal(snap.cost[in_snap], true_cost[in_true])
+        np.testing.assert_array_equal(snap.freq[in_snap], true_freq[in_true])
+    # and the exact per-destination identity always holds
+    true_loads = np.bincount(assignment.dest(keys), weights=weights,
+                             minlength=assignment.n_dest)
+    head_loads = np.bincount(assignment.dest(snap.keys), weights=snap.cost,
+                             minlength=assignment.n_dest)
+    assert snap.base_loads is not None
+    assert np.all(snap.base_loads >= -1e-9)
+    # base + head >= true everywhere (head estimates only overcount), and
+    # equality wherever no clipping occurred
+    assert np.all(head_loads + snap.base_loads >= true_loads - 1e-6)
+
+
+@settings(max_examples=30, deadline=None)
+@given(zipf_streams(), st.sampled_from([16, 256]))
+def test_head_exactness_zipf(stream, capacity):
+    keys, weights, seed = stream
+    _assert_exact_head(keys, weights, seed, capacity)
+
+
+@settings(max_examples=30, deadline=None)
+@given(drift_streams(), st.sampled_from([16, 256]))
+def test_head_exactness_drift(stream, capacity):
+    keys, weights, seed = stream
+    _assert_exact_head(keys, weights, seed, capacity)
+
+
+@settings(max_examples=30, deadline=None)
+@given(zipf_streams())
+def test_covering_capacity_is_fully_exact(stream):
+    """With capacity >= distinct keys the whole snapshot equals exact
+    counting — the invariant the engine parity tests lean on."""
+    keys, weights, seed = stream
+    uk, true_cost = _true_counts(keys, weights)
+    assignment = Assignment(ModHash(5, seed=1))
+    ss = SketchStats(SketchConfig(width=1 << 13, depth=4,
+                                  capacity=int(uk.size)),
+                     assignment.n_dest, seed=seed % 1_000)
+    for sl in _chunks(keys):
+        ss.update(keys[sl], assignment.dest(keys[sl]), weights[sl])
+    snap = ss.snapshot(assignment)
+    np.testing.assert_array_equal(snap.keys, uk)
+    np.testing.assert_array_equal(snap.cost, true_cost)
+    np.testing.assert_allclose(snap.base_loads,
+                               np.zeros(assignment.n_dest), atol=1e-9)

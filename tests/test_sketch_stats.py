@@ -1,0 +1,340 @@
+"""Sketch-mode controller stats: deterministic unit + integration tests.
+
+Property-based coverage (never-underestimate, SpaceSaving error bounds,
+head-key exactness under random streams) lives in
+``tests/test_sketch_properties.py`` behind the optional hypothesis extra;
+this file is the always-run tier: worked examples with hand-checked
+numbers, exact-vs-sketch controller parity when the tracker capacity
+covers the key domain, and the engine round-trip (SKETCH_PENDING handoff,
+backend parity, rescale) in sketch mode.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import Assignment, BalanceConfig, RebalanceController
+from repro.core.balancer import (CountMinSketch, KeyStats, ModHash,
+                                 SketchConfig, SketchStats,
+                                 SpaceSavingTracker, WChoices, metrics)
+from repro.streams.generator import WorkloadGen
+from repro.streams.operators import WordCount
+from repro.streams.topology import keyed_stage
+
+
+# ---------------------------------------------------------------------------
+# CountMinSketch
+# ---------------------------------------------------------------------------
+
+def test_cms_exact_on_sparse_stream():
+    cms = CountMinSketch(1024, 4, seed=7, channels=("cost", "mem"))
+    keys = np.array([1, 2, 3, 1, 1, 2], dtype=np.int64)
+    cms.update(keys, cost=np.ones(6), mem=np.full(6, 2.0))
+    got = cms.query(np.array([1, 2, 3], dtype=np.int64), "cost")
+    # 3 keys in 1024 columns x 4 rows: no key collides in every row
+    np.testing.assert_allclose(got, [3.0, 2.0, 1.0])
+    np.testing.assert_allclose(
+        cms.query(np.array([1, 2, 3], dtype=np.int64), "mem"),
+        [6.0, 4.0, 2.0])
+
+
+def test_cms_never_underestimates_under_collisions():
+    # Tiny width forces collisions; estimates must stay >= true counts.
+    cms = CountMinSketch(16, 3, seed=0)
+    rng = np.random.default_rng(4)
+    keys = rng.integers(0, 200, size=5000).astype(np.int64)
+    cms.update(keys, cost=np.ones(keys.size))
+    uk, true = np.unique(keys, return_counts=True)
+    est = cms.query(uk, "cost")
+    assert np.all(est >= true - 1e-9)
+
+
+def test_cms_reset_and_guards():
+    cms = CountMinSketch(64, 2)
+    cms.update(np.array([5], dtype=np.int64), cost=np.array([2.0]))
+    cms.reset()
+    assert cms.query(np.array([5], dtype=np.int64), "cost")[0] == 0.0
+    assert cms.query(np.zeros(0, dtype=np.int64)).size == 0
+    with pytest.raises(KeyError):
+        cms.update(np.array([5], dtype=np.int64), bogus=np.array([1.0]))
+    assert cms.nbytes == 64 * 2 * 8  # one float64 plane
+
+
+# ---------------------------------------------------------------------------
+# SpaceSavingTracker
+# ---------------------------------------------------------------------------
+
+def test_tracker_worked_example():
+    # capacity 2, stream 10:10, 20:3, 30:1 -> truncate subtracts the 3rd
+    # largest counter (1): keys {10: 9, 20: 2}, offset 1.
+    tr = SpaceSavingTracker(2)
+    tr.update(np.array([10, 10, 20, 30], dtype=np.int64),
+              np.array([5.0, 5.0, 3.0, 1.0]),
+              cost=np.array([5.0, 5.0, 3.0, 1.0]))
+    np.testing.assert_array_equal(tr.keys, [10, 20])
+    np.testing.assert_allclose(tr.counts, [9.0, 2.0])
+    assert tr.offset == 1.0 and tr.total == 14.0
+    # estimates are upper bounds: 10 -> 10 (true 10), 20 -> 3 (true 3),
+    # missing 30 -> offset 1 (true 1)
+    np.testing.assert_allclose(
+        tr.estimate(np.array([10, 20, 30], dtype=np.int64)), [10.0, 3.0, 1.0])
+    # both survivors were inserted before any truncation -> exact sides
+    assert tr.exact_mask.all()
+    np.testing.assert_allclose(tr.side("cost"), [10.0, 3.0])
+
+
+def test_tracker_captures_every_heavy_hitter():
+    rng = np.random.default_rng(0)
+    keys = rng.zipf(1.3, size=50_000).astype(np.int64)
+    cap = 64
+    tr = SpaceSavingTracker(cap)
+    for lo in range(0, keys.size, 7919):     # chunked, as the engine feeds it
+        chunk = keys[lo:lo + 7919]
+        tr.update(chunk, np.ones(chunk.size))
+    uk, true = np.unique(keys, return_counts=True)
+    assert tr.offset <= tr.total / (cap + 1) + 1e-9
+    est = tr.estimate(uk)
+    assert np.all(est >= true - 1e-9)                  # upper bound
+    assert np.all(est - true <= tr.offset + 1e-9)       # error <= offset
+    heavy = uk[true > tr.total / cap]
+    assert np.isin(heavy, tr.keys).all()               # no hitter missed
+
+
+def test_tracker_zero_weight_keys_do_not_insert():
+    tr = SpaceSavingTracker(4)
+    tr.update(np.array([1, 2], dtype=np.int64), np.array([5.0, 3.0]))
+    # zero-weight (held-state) fold: key 9 must not enter, but key 1's mem
+    # side counter must still accumulate
+    tr.update(np.array([1, 9], dtype=np.int64), np.zeros(2),
+              mem=np.array([7.0, 7.0]))
+    np.testing.assert_array_equal(tr.keys, [1, 2])
+    assert tr.side("mem")[0] == 7.0
+
+
+def test_tracker_validates_capacity():
+    with pytest.raises(ValueError):
+        SpaceSavingTracker(0)
+
+
+# ---------------------------------------------------------------------------
+# SketchStats adapter
+# ---------------------------------------------------------------------------
+
+def _zipf_batch(rng, n, k):
+    return (rng.zipf(1.4, size=n) % k).astype(np.int64)
+
+
+def test_snapshot_head_includes_table_keys_and_exact_base():
+    rng = np.random.default_rng(3)
+    assignment = Assignment(ModHash(6, seed=1))
+    assignment.table = {999_999: 2, 123_456: 4}   # quiet keys pinned in F
+    ss = SketchStats(SketchConfig(width=1 << 12, depth=4, capacity=64),
+                     assignment.n_dest, seed=0)
+    keys = _zipf_batch(rng, 30_000, 5_000)
+    ss.update(keys, assignment.dest(keys), np.ones(keys.size),
+              mem=np.ones(keys.size))
+    snap = ss.snapshot(assignment)
+    # table keys always appear in the head, even when never ingested
+    assert np.isin([999_999, 123_456], snap.keys).all()
+    assert snap.base_loads is not None and (snap.base_loads >= 0.0).all()
+    # exact per-dest totals: head loads + base reproduce true theta
+    true_loads = np.bincount(assignment.dest(keys),
+                             minlength=assignment.n_dest).astype(float)
+    folded = metrics.loads_for(snap, assignment.dest(snap.keys),
+                               assignment.n_dest)
+    # head estimation error cancels in base = total - head (up to clipping,
+    # which cannot trigger here: every head key was actually ingested)
+    np.testing.assert_allclose(folded, true_loads)
+
+
+def test_snapshot_head_side_counters_exact_when_capacity_covers_domain():
+    rng = np.random.default_rng(8)
+    assignment = Assignment(ModHash(4, seed=0))
+    k = 300
+    ss = SketchStats(SketchConfig(width=1 << 12, depth=4, capacity=k),
+                     assignment.n_dest)
+    keys = _zipf_batch(rng, 20_000, k)
+    cost = rng.integers(1, 5, size=keys.size).astype(np.float64)
+    mem = np.ones(keys.size)
+    for lo in range(0, keys.size, 3001):
+        sl = slice(lo, lo + 3001)
+        ss.update(keys[sl], assignment.dest(keys[sl]), cost[sl], mem=mem[sl])
+    snap = ss.snapshot(assignment)
+    uk, inv = np.unique(keys, return_inverse=True)
+    np.testing.assert_array_equal(snap.keys, uk)
+    np.testing.assert_array_equal(snap.cost, np.bincount(inv, weights=cost))
+    np.testing.assert_array_equal(snap.mem, np.bincount(inv, weights=mem))
+    np.testing.assert_array_equal(snap.base_loads,
+                                  np.zeros(assignment.n_dest))
+
+
+def test_end_interval_resets_everything():
+    assignment = Assignment(ModHash(3, seed=0))
+    ss = SketchStats(SketchConfig(capacity=8), assignment.n_dest)
+    keys = np.arange(5, dtype=np.int64)
+    ss.update(keys, assignment.dest(keys), np.ones(5))
+    ss.end_interval()
+    snap = ss.snapshot(assignment)
+    assert snap.keys.size == 0
+    np.testing.assert_array_equal(snap.base_loads, np.zeros(3))
+    # bounded memory regardless of traffic
+    assert ss.nbytes < 16 << 20
+
+
+# ---------------------------------------------------------------------------
+# Controller integration
+# ---------------------------------------------------------------------------
+
+def _agg(keys):
+    uk, inv = np.unique(keys, return_inverse=True)
+    return uk, np.bincount(inv).astype(np.float64)
+
+
+def test_sketch_controller_matches_exact_when_capacity_covers_domain():
+    gen = WorkloadGen(k=400, z=1.4, f=1.0, seed=2)
+    cfg = BalanceConfig(theta_max=0.05, table_max=2_000, window=1)
+    sk = SketchConfig(width=1 << 14, depth=4, capacity=4096)
+    ctrl_e = RebalanceController(Assignment(ModHash(8, seed=3)), cfg,
+                                 algorithm="mixed")
+    ctrl_s = RebalanceController(Assignment(ModHash(8, seed=3)), cfg,
+                                 algorithm="mixed", stats_mode="sketch",
+                                 sketch=sk)
+    for stats in gen.stream(ctrl_e.assignment, 3):
+        ev_e = ctrl_e.observe(stats.keys, stats.cost, stats.mem,
+                              freq=stats.freq, force=True)
+        ev_s = ctrl_s.observe(stats.keys, stats.cost, stats.mem,
+                              freq=stats.freq, force=True)
+        assert ev_e.triggered == ev_s.triggered
+        assert dict(ctrl_e.assignment.table) == dict(ctrl_s.assignment.table)
+        assert ev_e.result.theta == pytest.approx(ev_s.result.theta)
+
+
+def test_sketch_mode_streaming_ingest_equals_one_shot():
+    # many small un-aggregated ingests per interval == one big observe
+    rng = np.random.default_rng(5)
+    raw = (rng.zipf(1.3, size=12_000) % 300).astype(np.int64)
+    cfg = BalanceConfig(theta_max=0.05, table_max=1_000, window=1)
+    sk = SketchConfig(width=1 << 14, depth=4, capacity=1024)
+
+    def build():
+        return RebalanceController(Assignment(ModHash(6, seed=1)), cfg,
+                                   algorithm="mixed", stats_mode="sketch",
+                                   sketch=sk)
+
+    a, b = build(), build()
+    keys, cost = _agg(raw)
+    a.observe(keys, cost, cost.copy(), force=True)
+    for lo in range(0, raw.size, 999):    # un-aggregated chunked feed
+        chunk = raw[lo:lo + 999]
+        b.ingest(chunk, np.ones(chunk.size), mem=np.ones(chunk.size))
+    b.on_interval(None, force=True)
+    assert dict(a.assignment.table) == dict(b.assignment.table)
+
+
+def test_sketch_mode_guards():
+    cfg = BalanceConfig(theta_max=0.1, table_max=100, window=1)
+    exact = RebalanceController(Assignment(ModHash(4)), cfg)
+    with pytest.raises(ValueError):
+        exact.ingest(np.array([1], dtype=np.int64), np.array([1.0]))
+    with pytest.raises(ValueError):
+        exact.on_interval(None)
+    with pytest.raises(ValueError):
+        RebalanceController(Assignment(ModHash(4)), cfg,
+                            sketch=SketchConfig())
+    with pytest.raises(ValueError):
+        RebalanceController(Assignment(ModHash(4)), cfg, stats_mode="bogus")
+    sk = RebalanceController(Assignment(ModHash(4)), cfg,
+                             stats_mode="sketch")
+    assert sk.sketch is not None
+    assert sk.stats_mode == "sketch"
+
+
+def test_sketch_controller_tracks_last_stats():
+    cfg = BalanceConfig(theta_max=0.1, table_max=100, window=1)
+    ctrl = RebalanceController(Assignment(ModHash(4)), cfg,
+                               stats_mode="sketch")
+    keys = np.arange(50, dtype=np.int64)
+    ctrl.observe(keys, np.ones(50), np.ones(50), force=True)
+    assert ctrl.last_stats is not None
+    assert ctrl.last_stats.keys.size == 50
+    assert ctrl.last_stats.base_loads is not None
+
+
+# ---------------------------------------------------------------------------
+# Engine round-trip (SKETCH_PENDING handoff)
+# ---------------------------------------------------------------------------
+
+def _run_stage(state_backend, stats_mode, *, n_intervals=6, seed=11):
+    rng = np.random.default_rng(seed)
+    st = keyed_stage(WordCount(), 6, 0.3, table_max=500, window=2, seed=5,
+                     state_backend=state_backend, stats_mode=stats_mode)
+    for _ in range(n_intervals):
+        keys = (rng.zipf(1.3, size=4_000) % 300).astype(np.int64)
+        st.process_interval_emits(keys, None)
+    return st
+
+
+def test_engine_sketch_mode_backend_parity():
+    obj = _run_stage("object", "sketch")
+    col = _run_stage("columnar", "sketch")
+    assert (obj.controller.triggered_intervals()
+            == col.controller.triggered_intervals())
+    assert (dict(obj.controller.assignment.table)
+            == dict(col.controller.assignment.table))
+    # state fully conserved across rebalances in sketch mode
+    assert obj.total_state_keys() == col.total_state_keys() == 300
+    assert col.last_stats is not None and col.last_stats.keys.size > 0
+
+
+def test_engine_sketch_matches_exact_with_covering_capacity():
+    # K=300 distinct keys < default capacity 4096: sketch-mode engine run
+    # must produce the exact-mode rebalance decisions bit for bit.
+    sk = _run_stage("columnar", "sketch")
+    ex = _run_stage("columnar", "exact")
+    assert (sk.controller.triggered_intervals()
+            == ex.controller.triggered_intervals())
+    assert (dict(sk.controller.assignment.table)
+            == dict(ex.controller.assignment.table))
+
+
+def test_engine_sketch_mode_rescale_conserves_state():
+    st = _run_stage("columnar", "sketch", n_intervals=3)
+    before = st.total_state_keys()
+    st.scale_to(9)
+    assert st.total_state_keys() == before
+    rng = np.random.default_rng(77)
+    keys = (rng.zipf(1.3, size=4_000) % 300).astype(np.int64)
+    rep, _, _ = st.process_interval_emits(keys, None)
+    assert st.controller.assignment.n_dest == 9
+    assert rep.makespan > 0
+
+
+# ---------------------------------------------------------------------------
+# W-Choices through the shared tracker
+# ---------------------------------------------------------------------------
+
+def test_wchoices_head_matches_threshold_set_when_capacity_covers():
+    rng = np.random.default_rng(9)
+    keys = (rng.zipf(1.5, size=40_000) % 1_000).astype(np.int64)
+    uk, freq = _agg(keys)
+    stats = KeyStats(keys=uk, cost=freq, mem=np.ones(uk.size), freq=freq)
+    router = WChoices(head_threshold=0.01)
+    router.bind(Assignment(ModHash(10, seed=0)))
+    router.on_stats(stats)
+    # capacity (>= 4096) covers the 1000-key domain: tracker estimates are
+    # exact and the head is exactly the threshold set
+    expected = np.sort(uk[freq >= 0.01 * freq.sum()])
+    np.testing.assert_array_equal(router.head_keys, expected)
+
+
+def test_wchoices_tiny_capacity_never_misses_a_head_key():
+    rng = np.random.default_rng(10)
+    keys = (rng.zipf(1.6, size=30_000) % 500).astype(np.int64)
+    uk, freq = _agg(keys)
+    stats = KeyStats(keys=uk, cost=freq, mem=np.ones(uk.size), freq=freq)
+    exact = np.sort(uk[freq >= 0.05 * freq.sum()])
+    # capacity at the 4x-margin floor for this threshold: 80 entries
+    router = WChoices(head_threshold=0.05, head_capacity=80)
+    router.bind(Assignment(ModHash(10, seed=0)))
+    router.on_stats(stats)
+    # upper-bound estimates can only ADD borderline keys, never drop one
+    assert np.isin(exact, router.head_keys).all()
