@@ -1,0 +1,218 @@
+"""Throughput under injected failures + the recovery-lossless gate.
+
+Three arms per state backend, all fed the SAME recorded traffic trace:
+
+* **oracle** — plain fault-free run (no checkpoints): the cost floor;
+* **checkpointed** — :class:`repro.streams.faults.ChaosRunner` with an empty
+  fault plan, snapshotting every ``CADENCE`` intervals through the pack
+  round-trip + controller serialization: measures pure checkpoint overhead;
+* **chaos** — the same runner under a fixed kill/drop schedule: measures the
+  cost of restore-last-checkpoint + replay-buffered-intervals recovery.
+
+The *recovery-lossless contract is asserted per point*, not just reported:
+the chaos arm's :class:`IntervalReport` stream (every modelled field plus
+the per-task load vector), outputs and emitted sum must be **bit-identical**
+to the oracle arm's. Any divergence lands in ``failures`` and the benchmark
+exits 1 — CI's chaos job runs this before the wall-clock gate, so a
+recovery that silently loses or perturbs state can never read as a perf
+number.
+
+Run directly for JSON output:
+
+    PYTHONPATH=src:. python benchmarks/chaos_recovery.py [--smoke|--full] \
+        [--backends object,columnar] [--out f]
+
+or via the harness: ``python benchmarks/run.py --only chaos_recovery``.
+The committed CI baseline (``benchmarks/chaos_recovery.json``) is generated
+with the default sweep, a superset of the --smoke points (see
+check_perf_gate.py --chaos-fresh/--chaos-baseline). The multidevice CI leg
+re-runs with ``--backends sharded`` (assertion only, no baseline: virtual-
+device wall clocks are not comparable across runner classes).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from typing import List, Optional
+
+import numpy as np
+
+from repro.core import Assignment, BalanceConfig, RebalanceController
+from repro.core.balancer.hashing import Hash32
+from repro.streams import (ChaosRunner, DropDelivery, FaultPlan, KeyedStage,
+                           KillTask, WordCount, WorkloadGen)
+
+REPORT_FIELDS = ("interval", "tuples", "makespan", "migration_stall",
+                 "throughput", "skewness", "theta", "migrated_bytes",
+                 "table_size", "buffered")
+
+N_TASKS = 6
+WINDOW = 3
+K = 2_000
+TUPLES = 4_000
+CADENCE = 2
+
+SMOKE_BACKENDS = ["object", "columnar"]
+FULL_BACKENDS = ["object", "columnar", "device"]
+
+
+def _make_stage(backend: str) -> KeyedStage:
+    controller = RebalanceController(
+        Assignment(Hash32(N_TASKS, seed=0)),
+        BalanceConfig(theta_max=0.05, table_max=600, window=WINDOW),
+        algorithm="mixed")
+    return KeyedStage(WordCount(), controller, window=WINDOW,
+                      vectorized=True, state_backend=backend)
+
+
+def _make_trace(n_iv: int) -> List[np.ndarray]:
+    """One deterministic trace for every backend and arm (driver stage
+    only advances the generator's fluctuation loop)."""
+    gen = WorkloadGen(k=K, z=1.1, f=0.8, seed=2, window=WINDOW)
+    driver = _make_stage("object")
+    trace = []
+    for i in range(n_iv):
+        gen.interval(driver.controller.assignment, fluctuate=i > 0)
+        keys = gen.draw_tuples(TUPLES)
+        trace.append(keys)
+        driver.process_interval_arrays(keys)
+    return trace
+
+
+def _fault_plan(n_iv: int) -> FaultPlan:
+    """Two kills (one per crash site) + one dropped delivery, spread so the
+    schedule exercises recovery from both fresh and stale checkpoints."""
+    return FaultPlan([
+        KillTask(interval=max(2, n_iv // 3), task=1, site="mid"),
+        KillTask(interval=max(3, 2 * n_iv // 3), task=0, site="deliver"),
+        DropDelivery(interval=n_iv - 1),
+    ])
+
+
+def _reports_mismatch(got, want) -> Optional[str]:
+    if len(got) != len(want):
+        return f"report count {len(got)} != {len(want)}"
+    for rg, rw in zip(got, want):
+        for field in REPORT_FIELDS:
+            if getattr(rg, field) != getattr(rw, field):
+                return (f"interval {rg.interval}: {field} "
+                        f"{getattr(rg, field)!r} != {getattr(rw, field)!r}")
+        if not np.array_equal(np.asarray(rg.task_loads),
+                              np.asarray(rw.task_loads)):
+            return f"interval {rg.interval}: task_loads diverged"
+    return None
+
+
+def run(backends: Optional[List[str]] = None, full: bool = False,
+        smoke: bool = False) -> dict:
+    if backends is None:
+        backends = SMOKE_BACKENDS if smoke else FULL_BACKENDS
+    n_iv = 16 if full else 10
+    trace = _make_trace(n_iv)
+    total_tuples = n_iv * TUPLES
+    series: List[dict] = []
+    failures: List[str] = []
+    for backend in backends:
+        # oracle arm: the fault-free floor
+        oracle = _make_stage(backend)
+        t0 = time.perf_counter()
+        for keys in trace:
+            oracle.process_interval_arrays(keys)
+        t_oracle = time.perf_counter() - t0
+
+        # checkpointed arm: snapshot cadence, no faults
+        ck_stage = _make_stage(backend)
+        runner = ChaosRunner(ck_stage, checkpoint_every=CADENCE)
+        t0 = time.perf_counter()
+        for keys in trace:
+            runner.process_interval(keys)
+        t_ckpt = time.perf_counter() - t0
+        mism = _reports_mismatch(ck_stage.reports, oracle.reports)
+        if mism:
+            failures.append(f"{backend}/checkpointed: {mism}")
+
+        # chaos arm: kills + drop, recovery must be lossless
+        chaos_stage = _make_stage(backend)
+        runner = ChaosRunner(chaos_stage, _fault_plan(n_iv),
+                             checkpoint_every=CADENCE)
+        t0 = time.perf_counter()
+        for keys in trace:
+            runner.process_interval(keys)
+        t_chaos = time.perf_counter() - t0
+        mism = _reports_mismatch(chaos_stage.reports, oracle.reports)
+        if mism:
+            failures.append(f"{backend}/chaos: {mism}")
+        if chaos_stage.outputs != oracle.outputs:
+            failures.append(f"{backend}/chaos: outputs diverged")
+        if chaos_stage.emitted_sum != oracle.emitted_sum:
+            failures.append(f"{backend}/chaos: emitted_sum diverged")
+        n_events = len(runner.events)
+        if n_events != len(_fault_plan(n_iv).faults):
+            failures.append(
+                f"{backend}/chaos: {n_events} recovery events for "
+                f"{len(_fault_plan(n_iv).faults)} scheduled faults")
+
+        series.append({"name": f"{backend}/oracle", "seconds": t_oracle,
+                       "tuples_per_s": total_tuples / t_oracle})
+        series.append({"name": f"{backend}/checkpointed", "seconds": t_ckpt,
+                       "tuples_per_s": total_tuples / t_ckpt,
+                       "overhead_vs_oracle": t_ckpt / t_oracle})
+        series.append({"name": f"{backend}/chaos", "seconds": t_chaos,
+                       "tuples_per_s": total_tuples / t_chaos,
+                       "overhead_vs_oracle": t_chaos / t_oracle,
+                       "recoveries": n_events,
+                       "replayed": sum(e.replayed for e in runner.events)})
+    return {"backends": backends, "intervals": n_iv, "tuples": TUPLES,
+            "cadence": CADENCE, "series": series, "failures": failures,
+            "ok": not failures}
+
+
+def rows(quick: bool = True):
+    """run.py harness adapter."""
+    r = run(smoke=True) if quick else run(full=True)
+    out = []
+    for s in r["series"]:
+        derived = f"tps={s['tuples_per_s']:.0f}"
+        if "overhead_vs_oracle" in s:
+            derived += f";x{s['overhead_vs_oracle']:.2f}"
+        if "recoveries" in s:
+            derived += f";rec={s['recoveries']};ok={r['ok']}"
+        out.append((f"chaos_recovery/{s['name']}", s["seconds"] * 1e6,
+                    derived))
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="host backends only, 10 intervals (CI)")
+    ap.add_argument("--full", action="store_true",
+                    help="adds the device backend and 16 intervals")
+    ap.add_argument("--backends", default=None,
+                    help="comma-separated backend override (e.g. 'sharded' "
+                         "for the multidevice CI leg)")
+    ap.add_argument("--out", default=None,
+                    help="write JSON here instead of stdout")
+    args = ap.parse_args()
+    backends = args.backends.split(",") if args.backends else None
+    t0 = time.time()
+    result = run(backends=backends, full=args.full, smoke=args.smoke)
+    result["wall_s"] = time.time() - t0
+    blob = json.dumps(result, indent=2)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(blob + "\n")
+        print(f"wrote {args.out}: ok={result['ok']}", file=sys.stderr)
+    else:
+        print(blob)
+    if not result["ok"]:
+        for msg in result["failures"]:
+            print(f"RECOVERY FAILURE: {msg}", file=sys.stderr)
+    sys.exit(0 if result["ok"] else 1)
+
+
+if __name__ == "__main__":
+    main()

@@ -16,7 +16,12 @@ swing on the same machine):
   ``sketch_scaling`` series, keyed by ``(shape, k, mode)`` on ``seconds``
   (the exact-vs-sketch controller interval cycles — a regression in either
   mode's cycle time is caught here; the sketch's own >= 5x speedup and
-  theta-quality contracts are asserted inside the benchmark itself).
+  theta-quality contracts are asserted inside the benchmark itself);
+* **chaos/recovery** (``--chaos-fresh`` / ``--chaos-baseline``):
+  ``chaos_recovery`` series, keyed by point name (``backend/arm``) on
+  ``seconds`` — the oracle floor, the checkpoint-overhead arm and the
+  injected-failure recovery arm (the recovery-lossless bit-identity
+  contract is asserted inside the benchmark itself).
 
 A third section gates *values*, not wall time: **strategy matrix**
 (``--matrix-fresh`` / ``--matrix-baseline``) compares the ``mixed``-planner
@@ -80,6 +85,10 @@ def _index_fastpath(series):
 
 def _index_sketch(series):
     return {(s["shape"], s["k"], s["mode"]): s["seconds"] for s in series}
+
+
+def _index_chaos(series):
+    return {(s["name"],): s["seconds"] for s in series}
 
 #: strategy-matrix metrics gated by value (wall_s is machine noise; these
 #: are deterministic functions of the seeded workload + planner behavior)
@@ -166,6 +175,11 @@ def main() -> None:
     ap.add_argument("--sketch-baseline",
                     default="benchmarks/sketch_scaling.json",
                     help="committed sketch_scaling baseline JSON")
+    ap.add_argument("--chaos-fresh", default=None,
+                    help="JSON from the just-run chaos_recovery arms")
+    ap.add_argument("--chaos-baseline",
+                    default="benchmarks/chaos_recovery.json",
+                    help="committed chaos_recovery baseline JSON")
     ap.add_argument("--matrix-fresh", default=None,
                     help="JSON from the just-run strategy_matrix sweep")
     ap.add_argument("--matrix-baseline",
@@ -186,9 +200,11 @@ def main() -> None:
     args = ap.parse_args()
 
     if (args.fresh is None and args.fastpath_fresh is None
-            and args.sketch_fresh is None and args.matrix_fresh is None):
+            and args.sketch_fresh is None and args.chaos_fresh is None
+            and args.matrix_fresh is None):
         print("perf gate misconfigured: pass --fresh, --fastpath-fresh, "
-              "--sketch-fresh and/or --matrix-fresh", file=sys.stderr)
+              "--sketch-fresh, --chaos-fresh and/or --matrix-fresh",
+              file=sys.stderr)
         sys.exit(2)
 
     violations = []
@@ -217,6 +233,15 @@ def main() -> None:
         with open(args.sketch_baseline) as f:
             base = _index_sketch(json.load(f)["series"])
         v, g = _gate_section("sketch_scaling", fresh, base, args.max_ratio,
+                             args.min_baseline_s)
+        violations += v
+        gated += g
+    if args.chaos_fresh is not None:
+        with open(args.chaos_fresh) as f:
+            fresh = _index_chaos(json.load(f)["series"])
+        with open(args.chaos_baseline) as f:
+            base = _index_chaos(json.load(f)["series"])
+        v, g = _gate_section("chaos_recovery", fresh, base, args.max_ratio,
                              args.min_baseline_s)
         violations += v
         gated += g

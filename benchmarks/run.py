@@ -16,15 +16,17 @@ MODULES = [
     "fig18_table_growth", "fig19_window", "fig20_beta",
     "moe_skewshield", "kernels_bench", "engine_fastpath", "planner_scaling",
     "sketch_scaling", "topology_pipeline", "strategy_matrix",
+    "chaos_recovery",
 ]
 
 #: the per-PR CI subset (--smoke): one representative module per subsystem —
 #: single-stage engine figure, multi-stage topology, the cross-strategy
-#: matrix (which also asserts mixed/reference and pkg/potc parity per shape)
-#: and the sketch-vs-exact stats A/B (which asserts its theta-quality
-#: contract per shape)
+#: matrix (which also asserts mixed/reference and pkg/potc parity per shape),
+#: the sketch-vs-exact stats A/B (which asserts its theta-quality contract
+#: per shape) and the chaos/recovery arms (which assert the recovery-
+#: lossless contract per point)
 SMOKE_MODULES = ["fig16_tpch", "topology_pipeline", "strategy_matrix",
-                 "sketch_scaling"]
+                 "sketch_scaling", "chaos_recovery"]
 
 
 def main() -> None:

@@ -2,6 +2,8 @@
 # dynamic, migration-aware rebalancing (balancer + controller + data plane).
 
 from . import balancer
+from .autoscale import (AutoscaleConfig, AutoscaleDecision, AutoscaleLoop,
+                        AutoscalePolicy, HeartbeatMonitor)
 from .balancer import (ALGORITHMS, Assignment, BalanceConfig, ConsistentHash,
                        KeyStats, ModHash, PartialKeyGrouping,
                        PartitionStrategy, PowerOfBothChoices, RebalanceResult,
@@ -15,4 +17,6 @@ __all__ = [
     "ControllerEvent", "RebalanceController",
     "PartitionStrategy", "TablePlanner", "PartialKeyGrouping",
     "PowerOfBothChoices", "WChoices", "resolve_strategy", "strategy_names",
+    "AutoscaleConfig", "AutoscaleDecision", "AutoscaleLoop",
+    "AutoscalePolicy", "HeartbeatMonitor",
 ]

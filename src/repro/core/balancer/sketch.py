@@ -169,6 +169,24 @@ class CountMinSketch:
         for plane in self.planes.values():
             plane[:] = 0.0
 
+    # -- serialize seam (checkpointed recovery) --------------------------------
+    def state_dict(self) -> dict:
+        """Plain-array snapshot of the sketch (checkpoint contract)."""
+        return {"width": self.width, "depth": self.depth,
+                "seeds": self._seeds.copy(),
+                "planes": {ch: p.copy() for ch, p in self.planes.items()}}
+
+    def load_state_dict(self, state: dict) -> None:
+        if int(state["width"]) != self.width \
+                or int(state["depth"]) != self.depth:
+            raise ValueError(
+                f"sketch geometry mismatch: checkpoint is "
+                f"{state['depth']}x{state['width']}, live sketch is "
+                f"{self.depth}x{self.width}")
+        self._seeds = np.asarray(state["seeds"], dtype=np.uint32).copy()
+        self.planes = {ch: np.asarray(p, dtype=np.float64).copy()
+                       for ch, p in state["planes"].items()}
+
     @property
     def nbytes(self) -> int:
         return sum(p.nbytes for p in self.planes.values())
@@ -230,6 +248,27 @@ class SpaceSavingTracker:
     def nbytes(self) -> int:
         return int(self._keys.nbytes + self._count.nbytes + self._err.nbytes
                    + sum(a.nbytes for a in self._side.values()))
+
+    # -- serialize seam (checkpointed recovery) --------------------------------
+    def state_dict(self) -> dict:
+        """Plain-array snapshot of the tracker (checkpoint contract)."""
+        return {"capacity": self.capacity, "keys": self._keys.copy(),
+                "count": self._count.copy(), "err": self._err.copy(),
+                "side": {ch: a.copy() for ch, a in self._side.items()},
+                "offset": self.offset, "total": self.total}
+
+    def load_state_dict(self, state: dict) -> None:
+        if int(state["capacity"]) != self.capacity:
+            raise ValueError(
+                f"tracker capacity mismatch: checkpoint has "
+                f"{state['capacity']}, live tracker has {self.capacity}")
+        self._keys = np.asarray(state["keys"], dtype=np.int64).copy()
+        self._count = np.asarray(state["count"], dtype=np.float64).copy()
+        self._err = np.asarray(state["err"], dtype=np.float64).copy()
+        self._side = {ch: np.asarray(a, dtype=np.float64).copy()
+                      for ch, a in state["side"].items()}
+        self.offset = float(state["offset"])
+        self.total = float(state["total"])
 
     def estimate(self, keys: Array) -> Array:
         """Upper-bound estimate of each key's true ingested weight."""
@@ -472,6 +511,25 @@ class SketchStats:
         self.tracker = SpaceSavingTracker(self.config.capacity)
         self._dest_cost[:] = 0.0
         self._mem_total = 0.0
+
+    # -- serialize seam (checkpointed recovery) --------------------------------
+    def state_dict(self) -> dict:
+        """Snapshot of the full mid-interval measurement state: recovery
+        restores at an interval boundary, but a crash can land after a
+        partial ingest, so the planes/tracker/totals must round-trip too."""
+        return {"dest_cost": self._dest_cost.copy(),
+                "mem_total": self._mem_total,
+                "cms": self.cms.state_dict(),
+                "tracker": self.tracker.state_dict()}
+
+    def load_state_dict(self, state: dict) -> None:
+        self._dest_cost = np.asarray(state["dest_cost"],
+                                     dtype=np.float64).copy()
+        self._mem_total = float(state["mem_total"])
+        self.cms.load_state_dict(state["cms"])
+        # end_interval swaps the tracker instance, so rebuild before loading
+        self.tracker = SpaceSavingTracker(int(state["tracker"]["capacity"]))
+        self.tracker.load_state_dict(state["tracker"])
 
     @property
     def nbytes(self) -> int:

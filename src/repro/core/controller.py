@@ -17,6 +17,7 @@ Protocol per interval (paper's numbered steps):
 
 from __future__ import annotations
 
+import copy
 import dataclasses
 from typing import Callable, List, Optional
 
@@ -222,6 +223,55 @@ class RebalanceController:
         ev = ControllerEvent(self._interval, True, th, result)
         self.history.append(ev)
         return ev
+
+    # -- checkpoint seam (repro.streams.checkpoint) ---------------------------
+    def state_dict(self) -> dict:
+        """Everything a recovery needs to resume the protocol bit-identically:
+        the assignment (routing table + hash), the version counter that keys
+        device routing caches, the interval clock, the event history, the
+        planned-on stats, the strategy (routers carry live per-tuple load
+        state), and the sketch measurement state when in sketch mode.
+
+        The returned dict owns its data (copies/deepcopies), so it stays
+        valid however far the live controller advances afterwards — and it
+        is plain numpy/dataclass material, so it pickles for the on-disk
+        manifest path.
+        """
+        return {
+            "assignment": self.assignment.copy(),
+            "assignment_version": self.assignment_version,
+            "interval": self._interval,
+            "history": list(self.history),
+            "last_stats": self.last_stats,
+            "strategy": copy.deepcopy(self.strategy),
+            "stats_mode": self.stats_mode,
+            "sketch": (self._sketch.state_dict()
+                       if self._sketch is not None else None),
+        }
+
+    def load_state_dict(self, state: dict) -> None:
+        """Restore a :meth:`state_dict` snapshot. Deep-copies on the way in
+        as well, so one checkpoint can be restored any number of times.
+
+        The strategy is restored as-is, NOT re-``bind()``-ed: bind resets a
+        choice router's load estimates, which are exactly the state the
+        checkpoint preserves.
+        """
+        if state["stats_mode"] != self.stats_mode:
+            raise ValueError(
+                f"stats_mode mismatch: checkpoint was taken in "
+                f"{state['stats_mode']!r} mode, controller runs "
+                f"{self.stats_mode!r}")
+        self.assignment = state["assignment"].copy()
+        self.assignment_version = int(state["assignment_version"])
+        self._interval = int(state["interval"])
+        self.history = list(state["history"])
+        self.last_stats = state["last_stats"]
+        self.strategy = copy.deepcopy(state["strategy"])
+        self.algorithm_name = self.strategy.name
+        self._algorithm = getattr(self.strategy, "fn", None)
+        if state["sketch"] is not None:
+            self._sketch.load_state_dict(state["sketch"])
 
     # -- elastic scale-out/in (paper Fig. 15) ---------------------------------
     def rescale(self, n_dest: int, stats: KeyStats) -> ControllerEvent:

@@ -1,9 +1,16 @@
 """Faithful stream-processing substrate: engine, operators, state, generator,
-pluggable state backends, and multi-stage topologies."""
+pluggable state backends, multi-stage topologies, and checkpointed recovery
+with deterministic failure injection."""
 
 from .backends import (BACKENDS, ColumnarBackend, DeviceBackend,
                        ObjectBackend, StateBackend, register_backend)
+from .checkpoint import (CheckpointStore, StageCheckpoint, TopologyCheckpoint,
+                         checkpoint_stage, checkpoint_topology, restore_stage,
+                         restore_topology)
 from .engine import STATE_BACKENDS, SUBSTRATES, IntervalReport, KeyedStage
+from .faults import (ChaosRunner, DropDelivery, DuplicateDelivery, FaultPlan,
+                     FaultInjector, KillTask, RecoveryEvent, StallTask,
+                     TaskKilled, TaskStalled)
 from .generator import WorkloadGen, zipf_frequencies
 from .operators import (BatchResult, Filter, IntervalBatchResult, MergeCounts,
                         Operator, PartialWordCount, WindowedSelfJoin,
@@ -24,6 +31,12 @@ __all__ = [
     "BACKENDS", "StateBackend", "ObjectBackend", "ColumnarBackend",
     "DeviceBackend", "register_backend", "ShardedDeviceBackend",
     "ShardedStateFleet",
+    "CheckpointStore", "StageCheckpoint", "TopologyCheckpoint",
+    "checkpoint_stage", "checkpoint_topology", "restore_stage",
+    "restore_topology",
+    "ChaosRunner", "DropDelivery", "DuplicateDelivery", "FaultPlan",
+    "FaultInjector", "KillTask", "RecoveryEvent", "StallTask",
+    "TaskKilled", "TaskStalled",
 ]
 
 

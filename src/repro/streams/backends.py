@@ -192,6 +192,42 @@ class StateBackend:
     def install_batch(self, task: int, pack) -> None:
         self.stage.stores[task].install_batch(pack)
 
+    # -- checkpoint/restore (repro.streams.checkpoint) -------------------------
+    def checkpoint(self) -> dict:
+        """Snapshot every task's state as cloned packs, riding the existing
+        extract/install contract: extract all held keys, clone the pack,
+        install it straight back. Observationally transparent — extraction
+        preserves key order on every store type, and the closed forms are
+        order-free sums — so a checkpointed run stays bit-identical to an
+        uncheckpointed one (asserted by ``tests/test_chaos_recovery.py``).
+
+        Returns ``{"packs": [pack_per_task, ...], **backend_extras}``.
+        """
+        stage = self.stage
+        packs = []
+        for task, store in enumerate(stage.stores):
+            held, _ = store.sizes_arrays()
+            pack = self.extract_batch(task, held)
+            snapshot = pack.clone()
+            self.install_batch(task, pack)
+            packs.append(snapshot)
+        return {"packs": packs}
+
+    def restore(self, ckpt) -> None:
+        """Rebuild the store fleet from a :class:`StageCheckpoint`'s packs.
+
+        Fresh stores accept any interval clock (a new columnar store's
+        monotonic guard is unset), so restoring an older checkpoint after
+        the live fleet advanced is always legal; the stage-level counters
+        are rewound by ``restore_stage``.
+        """
+        stage = self.stage
+        stage.stores = []
+        for _ in ckpt.packs:
+            stage.stores.append(self.new_store())
+        for store, pack in zip(stage.stores, ckpt.packs):
+            store.install_batch(pack.clone())
+
     # -- paper step 1 ----------------------------------------------------------
     def collect_stats(self, acc_keys, acc_cost, acc_freq,
                       held) -> Optional[KeyStats]:
@@ -253,6 +289,9 @@ class HostStoreBackend(StateBackend):
             self.dispatch_batch(iv, keys, dests, idx, values, task_cost,
                                 acc_keys, acc_cost, acc_freq, emit_acc)
         stage.clear_pause()
+        # fault seam: state is mutated, stores not yet advanced past the
+        # boundary, no report — a genuinely dirty mid-interval crash point
+        stage._failpoint("mid")
 
         held = [store.end_interval_collect(iv) for store in stage.stores]
 
@@ -573,6 +612,41 @@ class DeviceBackend(StateBackend):
             fleet.task[hk] = dst[moving][ok][held].astype(np.int32)
         return total
 
+    # -- checkpoint/restore ----------------------------------------------------
+    def checkpoint(self) -> dict:
+        """Base pack round-trip plus the fleet's ring-column clock: a task
+        whose pack is empty carries no ``col_iv``, but the shared fleet's
+        clock must still survive (install_batch only adopts columns from
+        non-empty packs)."""
+        snap = super().checkpoint()
+        snap["col_iv"] = self._fleet.col_iv.copy()
+        return snap
+
+    def restore(self, ckpt) -> None:
+        """Rebuild the fleet from scratch and reinstall the packs.
+
+        ``_make_fleet`` is the same seam the constructor (and the sharded
+        subclass) uses, so restore works identically on the mesh-sharded
+        fleet. The dense-dest cache is dropped: the restored controller's
+        ``assignment_version`` rewinds, so a stale cache entry could alias
+        a different table under the same version number.
+        """
+        stage = self.stage
+        self._fleet = self._make_fleet()
+        self._dest_dense_cache = None
+        self._views_made = 0
+        stage.stores = []
+        for _ in ckpt.packs:
+            stage.stores.append(self.new_store())
+        maxk = max((int(p.keys.max()) for p in ckpt.packs if p.keys.size),
+                   default=-1)
+        if maxk >= 0:
+            self._fleet.ensure_domain(maxk + 1)
+        self._fleet.col_iv = np.asarray(ckpt.backend_extra["col_iv"],
+                                        dtype=np.int64).copy()
+        for store, pack in zip(stage.stores, ckpt.packs):
+            store.install_batch(pack.clone())
+
     # -- dense routing table ---------------------------------------------------
     def _dest_dense_arrays(self):
         """Dense F(k) table over every key id, refreshed once per
@@ -736,6 +810,9 @@ class DeviceBackend(StateBackend):
                 fleet.mem[:dom][~alive] = 0.0
             stats = self.collect_stats(None, None, None, None)
 
+        # fault seam: device state and host mirrors are mutated (and in
+        # sketch mode the controller's sketch already ingested), no report
+        stage._failpoint("mid")
         report = stage._finish_interval(iv, n, task_cost, buffered_count,
                                         stats)
         if not collect_emits:

@@ -173,6 +173,11 @@ class KeyedStage:
         self._plan_time_pending = 0.0
         self._table_capacity = 0      # pallas routing-table pad, high-water mark
         self._route_cache = None      # (cache key, device tk, device td)
+        #: failure-injection seam (repro.streams.faults): when set, called as
+        #: ``failpoint(site, stage)`` at the engine's crash points — "deliver"
+        #: (before any mutation) and "mid" (state mutated, no report yet).
+        #: None (the default) is zero-overhead for production runs.
+        self.failpoint = None
         self._kernel_interpret = kernel_interpret
         # backend selection (and its support errors) precedes substrate init
         backend_cls = resolve_backend(state_backend, operator, controller,
@@ -205,6 +210,11 @@ class KeyedStage:
             # compiled kernels on real TPU backends; interpret elsewhere
             kernel_interpret = jax.default_backend() != "tpu"
         self._kernel_interpret = bool(kernel_interpret)
+
+    # -- failure-injection seam (repro.streams.faults) --------------------------
+    def _failpoint(self, site: str) -> None:
+        if self.failpoint is not None:
+            self.failpoint(site, self)
 
     # -- pause-window clock (protocol steps 4/7) --------------------------------
     def begin_interval(self) -> int:
@@ -250,6 +260,7 @@ class KeyedStage:
         """Array-native entry point: ``keys`` as int64 array, ``values`` as an
         aligned sequence (or None when the operator sets ``needs_values``
         False). This is the zero-conversion path used by the benchmarks."""
+        self._failpoint("deliver")
         if not self.vectorized:
             return self._process_interval_reference(keys, values)
         return self.backend.process_interval(keys, values)
@@ -268,6 +279,7 @@ class KeyedStage:
         parity-testable; it is the stage-to-stage hand-off used by
         :class:`repro.streams.topology.Topology`.
         """
+        self._failpoint("deliver")
         if not self.vectorized:
             return self._process_interval_reference(keys, values,
                                                     collect_emits=True)
@@ -407,6 +419,7 @@ class KeyedStage:
                               emit_log)
             buffer.clear()
         self.clear_pause()
+        self._failpoint("mid")
 
         for store in self.stores:
             store.end_interval(iv)
@@ -469,6 +482,10 @@ class KeyedStage:
         New stores must exist before the controller's migration executor runs;
         shrink requires draining removed stores first (state migrates away via
         the rescale plan, since no key may map to a dead task)."""
+        if n_tasks < 1:
+            raise ValueError(
+                f"scale_to requires n_tasks >= 1, got {n_tasks}: a stage "
+                "cannot run with an empty fleet")
         if self.controller.strategy.is_router:
             # fail before touching stores: controller.rescale would raise
             # anyway, but only after we had already grown the fleet

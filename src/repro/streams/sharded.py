@@ -226,6 +226,8 @@ class ShardedStateFleet(DeviceStateFleet):
     def _to_dense_1d(self, garr) -> np.ndarray:
         """(S*(B+1),) global output -> host key-dense (domain+1,)."""
         a = np.asarray(garr)
+        if self._block == 0:           # domain never grown: nothing held yet
+            return np.zeros(self.domain + 1, a.dtype)
         L = self._block + 1
         dense = a.reshape(self.n_shards, L)[:, :self._block] \
             .reshape(-1)[:self.domain]
@@ -234,6 +236,8 @@ class ShardedStateFleet(DeviceStateFleet):
         return out
 
     def _to_dense_2d(self, a: np.ndarray) -> np.ndarray:
+        if self._block == 0:           # domain never grown: nothing held yet
+            return np.zeros((a.shape[0], self.domain + 1), a.dtype)
         L = self._block + 1
         dense = a.reshape(a.shape[0], self.n_shards, L)[:, :, :self._block] \
             .reshape(a.shape[0], -1)[:, :self.domain]

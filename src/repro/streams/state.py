@@ -261,6 +261,14 @@ class ObjectPack:
         return ObjectPack(self.keys[mask],
                           [s for s, m in zip(self.states, mask.tolist()) if m])
 
+    def clone(self) -> "ObjectPack":
+        """Deep-copied pack (checkpoint contract): the original pack holds
+        live :class:`KeyState` references, so a snapshot that must survive
+        further mutation — or be installed more than once — needs its own
+        state objects."""
+        import copy
+        return ObjectPack(self.keys.copy(), copy.deepcopy(self.states))
+
 
 # ---------------------------------------------------------------------------
 # Columnar backend
@@ -567,3 +575,12 @@ class ColumnarPack:
         mask = np.asarray(mask, dtype=bool)
         return ColumnarPack(self.keys[mask], self.vals[mask],
                             self.sizes[mask], self.present[mask], self.col_iv)
+
+    def clone(self) -> "ColumnarPack":
+        """Array-copied pack (checkpoint contract) — extraction already
+        slices fresh arrays, but a checkpoint must stay installable more
+        than once, and ``install_batch`` assigns the pack's rows into the
+        target store, so the snapshot keeps its own buffers."""
+        return ColumnarPack(self.keys.copy(), self.vals.copy(),
+                            self.sizes.copy(), self.present.copy(),
+                            self.col_iv.copy())

@@ -209,6 +209,17 @@ class Topology:
         """Keyed state held across every stage's store fleet (leak checks)."""
         return sum(spec.stage.total_state_keys() for spec in self.specs)
 
+    # -- checkpointed recovery (repro.streams.checkpoint) ----------------------
+    def checkpoint(self):
+        """Coherent pipeline snapshot: every stage at this source boundary."""
+        from .checkpoint import checkpoint_topology
+        return checkpoint_topology(self)
+
+    def restore(self, ckpt) -> None:
+        """Rewind every stage (and the pipeline clock) to ``ckpt``."""
+        from .checkpoint import restore_topology
+        restore_topology(self, ckpt)
+
     # -- one interval through the whole pipeline -------------------------------
     def process_interval(self, keys: np.ndarray,
                          values: Optional[np.ndarray] = None

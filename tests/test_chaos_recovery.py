@@ -1,0 +1,534 @@
+"""Checkpointed recovery is *lossless*: chaos == oracle, bit for bit.
+
+The tentpole property: run the same recorded traffic through (a) a fault-free
+oracle stage and (b) a chaos stage where :class:`ChaosRunner` injects kills
+(at both engine crash sites), dropped/duplicated deliveries and store stalls,
+recovering each by restore-last-checkpoint + replay-buffered-intervals. The
+resulting :class:`IntervalReport` streams — every modelled field plus the
+per-task load vectors — must be **identical** on every state backend
+(object/columnar/device/sharded), as must outputs and the emitted sum.
+Recovery must not even perturb the *performance model*, because the replay
+re-runs the same protocol decisions against the same restored controller
+state.
+
+Also covered here: checkpoint transparency (snapshotting every interval
+changes nothing), the disk round-trip through :class:`CheckpointStore` into a
+freshly constructed stage, sketch-mode controller state across restores,
+whole-topology coordination, a Hypothesis property randomizing the fault
+schedule, the autoscaling policy loop (convergence without oscillation on
+drift/burst shapes + the migration-cost damper), the heartbeat stall
+detector, the ``scale_to`` hardening satellites, and the pause/replay edge
+where traffic ends mid-pause (the engine's buffered-flush path) on every
+backend.
+"""
+
+import types
+
+import numpy as np
+import pytest
+
+from repro.core import (Assignment, AutoscaleConfig, AutoscaleLoop,
+                        AutoscalePolicy, BalanceConfig, HeartbeatMonitor,
+                        ModHash, RebalanceController)
+from repro.core.balancer.hashing import Hash32
+from repro.streams import (ChaosRunner, CheckpointStore, DropDelivery,
+                           DuplicateDelivery, FaultPlan, KeyedStage, KillTask,
+                           PartialWordCount, StageSpec, StallTask, Topology,
+                           WordCount, WorkloadGen, checkpoint_stage,
+                           keyed_stage, restore_stage)
+
+REPORT_FIELDS = ("interval", "tuples", "makespan", "migration_stall",
+                 "throughput", "skewness", "theta", "migrated_bytes",
+                 "table_size", "buffered")
+
+BACKENDS = ["object", "columnar", "device", "sharded"]
+
+
+def _guard(backend):
+    if backend in ("device", "sharded"):
+        pytest.importorskip("jax")
+
+
+def make_stage(backend="object", n_tasks=6, window=3, theta_max=0.05,
+               table_max=400, seed=0, vectorized=True, **kwargs):
+    hash_cls = Hash32 if backend in ("device", "sharded") else ModHash
+    controller = RebalanceController(
+        Assignment(hash_cls(n_tasks, seed=seed)),
+        BalanceConfig(theta_max=theta_max, table_max=table_max,
+                      window=window),
+        algorithm="mixed")
+    return KeyedStage(WordCount(), controller, window=window,
+                      vectorized=vectorized, state_backend=backend, **kwargs)
+
+
+def make_trace(n_iv=10, n_tuples=600, k=800, seed=2, window=3):
+    """Record a deterministic per-interval key trace once, then feed the
+    *same* arrays to every stage under test — the oracle and the chaos run
+    must see identical traffic for bit-identity to be meaningful."""
+    gen = WorkloadGen(k=k, z=1.1, f=0.8, seed=seed, window=window)
+    driver = make_stage("object", window=window)
+    trace = []
+    for i in range(n_iv):
+        gen.interval(driver.controller.assignment, fluctuate=i > 0)
+        keys = gen.draw_tuples(n_tuples)
+        trace.append(keys)
+        driver.process_interval_arrays(keys)
+    return trace
+
+
+@pytest.fixture(scope="module")
+def trace():
+    return make_trace()
+
+
+def assert_reports_identical(got, want):
+    assert len(got) == len(want)
+    for rg, rw in zip(got, want):
+        for field in REPORT_FIELDS:
+            assert getattr(rg, field) == getattr(rw, field), \
+                (rg.interval, field)
+        assert np.array_equal(np.asarray(rg.task_loads),
+                              np.asarray(rw.task_loads)), \
+            (rg.interval, "task_loads")
+
+
+def run_oracle(backend, trace):
+    stage = make_stage(backend)
+    for keys in trace:
+        stage.process_interval_arrays(keys)
+    return stage
+
+
+# -- the recovery-lossless property (fixed instances, every backend) ----------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_kill_recovery_is_lossless(backend, trace):
+    """Kills at BOTH crash sites — mid-interval (state half-mutated) and
+    at delivery — restore + replay to the oracle's exact report stream."""
+    _guard(backend)
+    oracle = run_oracle(backend, trace)
+    plan = FaultPlan([KillTask(interval=3, task=1, site="mid"),
+                      KillTask(interval=5, task=0, site="deliver"),
+                      KillTask(interval=7, task=2, site="mid")])
+    stage = make_stage(backend)
+    runner = ChaosRunner(stage, plan, checkpoint_every=2)
+    for keys in trace:
+        runner.process_interval(keys)
+    assert [(e.interval, e.kind) for e in runner.events] == \
+        [(3, "kill@mid"), (5, "kill@deliver"), (7, "kill@mid")]
+    assert_reports_identical(stage.reports, oracle.reports)
+    assert stage.emitted_sum == oracle.emitted_sum
+    assert stage.outputs == oracle.outputs
+
+
+@pytest.mark.parametrize("backend", ["object", "columnar"])
+def test_delivery_faults_are_recovered(backend, trace):
+    """Dropped (0x) and duplicated (2x) deliveries are detected by epoch
+    mismatch and healed by restore + replay — exactly-once is recovered."""
+    _guard(backend)
+    oracle = run_oracle(backend, trace)
+    plan = FaultPlan([DropDelivery(interval=4),
+                      DuplicateDelivery(interval=7)])
+    stage = make_stage(backend)
+    runner = ChaosRunner(stage, plan, checkpoint_every=2)
+    for keys in trace:
+        runner.process_interval(keys)
+    assert [(e.interval, e.kind) for e in runner.events] == \
+        [(4, "drop"), (7, "duplicate")]
+    assert_reports_identical(stage.reports, oracle.reports)
+    assert stage.outputs == oracle.outputs
+
+
+def test_stall_heals_under_retry_and_is_lossless(trace):
+    oracle = run_oracle("columnar", trace)
+    plan = FaultPlan([StallTask(interval=4, task=2, attempts=3)])
+    stage = make_stage("columnar")
+    runner = ChaosRunner(stage, plan, checkpoint_every=3)
+    for keys in trace:
+        runner.process_interval(keys)
+    assert [e.kind for e in runner.events] == ["stall@deliver"]
+    # the replay retried from the checkpoint until the stall burned off
+    assert runner.events[0].replayed >= 1
+    assert_reports_identical(stage.reports, oracle.reports)
+
+
+def test_kill_before_first_cadence_checkpoint(trace):
+    """Recovery works from the interval-0 baseline snapshot the runner takes
+    at construction — a kill in interval 1 replays from a pristine stage."""
+    oracle = run_oracle("object", trace)
+    stage = make_stage("object")
+    runner = ChaosRunner(stage, FaultPlan([KillTask(interval=1, site="mid")]),
+                         checkpoint_every=4)
+    for keys in trace:
+        runner.process_interval(keys)
+    assert_reports_identical(stage.reports, oracle.reports)
+
+
+# -- checkpoint transparency + the disk round-trip ----------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_checkpointing_is_observationally_free(backend, trace):
+    """Snapshotting after EVERY interval (the extract -> clone -> reinstall
+    round-trip, plus controller serialization) must not change a thing."""
+    _guard(backend)
+    plain = run_oracle(backend, trace)
+    stage = make_stage(backend)
+    for keys in trace:
+        stage.process_interval_arrays(keys)
+        checkpoint_stage(stage)
+    assert_reports_identical(stage.reports, plain.reports)
+    assert stage.outputs == plain.outputs
+    assert stage.emitted_sum == plain.emitted_sum
+
+
+@pytest.mark.parametrize("backend", ["object", "columnar", "device"])
+def test_restore_rewinds_and_replays_identically(backend, trace):
+    """restore_stage is a true rewind: re-running the tail after a restore
+    reproduces the exact reports the first run produced."""
+    _guard(backend)
+    stage = make_stage(backend)
+    for keys in trace[:5]:
+        stage.process_interval_arrays(keys)
+    ckpt = checkpoint_stage(stage)
+    for keys in trace[5:]:
+        stage.process_interval_arrays(keys)
+    first = list(stage.reports)
+    restore_stage(stage, ckpt)
+    assert stage._interval == 5
+    for keys in trace[5:]:
+        stage.process_interval_arrays(keys)
+    assert_reports_identical(stage.reports, first)
+    # and the same checkpoint restores twice (packs re-clone on install)
+    restore_stage(stage, ckpt)
+    for keys in trace[5:]:
+        stage.process_interval_arrays(keys)
+    assert_reports_identical(stage.reports, first)
+
+
+def test_disk_roundtrip_into_fresh_stage(tmp_path, trace):
+    """CheckpointStore -> fresh, never-run stage: continuing from disk is
+    indistinguishable from never having crashed."""
+    store = CheckpointStore(tmp_path / "ckpts")
+    src = make_stage("object")
+    for keys in trace[:6]:
+        src.process_interval_arrays(keys)
+    store.save(checkpoint_stage(src))
+    for keys in trace[6:]:
+        src.process_interval_arrays(keys)
+
+    fresh = make_stage("object")
+    ckpt = store.load_latest()
+    assert ckpt.interval == 6 == store.latest_interval()
+    restore_stage(fresh, ckpt)
+    for keys in trace[6:]:
+        fresh.process_interval_arrays(keys)
+    assert_reports_identical(fresh.reports, src.reports)
+    assert fresh.outputs == src.outputs
+
+
+def test_checkpoint_store_manifest_and_retention(tmp_path):
+    store = CheckpointStore(tmp_path, keep=2)
+    assert store.load_latest() is None and store.latest_interval() is None
+    stage = make_stage("object", n_tasks=3)
+    trace = make_trace(n_iv=3, n_tuples=100, k=50, seed=9)
+    for keys in trace:
+        stage.process_interval_arrays(keys)
+        store.save(checkpoint_stage(stage))
+    snaps = sorted(p.name for p in tmp_path.glob("ckpt_*.pkl"))
+    assert snaps == ["ckpt_00000002.pkl", "ckpt_00000003.pkl"]  # keep=2 pruned
+    assert store.latest_interval() == 3
+    assert store.load_latest().interval == 3
+
+
+def test_restore_validates_backend_and_window(trace):
+    stage = make_stage("object")
+    stage.process_interval_arrays(trace[0])
+    ckpt = checkpoint_stage(stage)
+    other = make_stage("columnar")
+    with pytest.raises(ValueError, match="state_backend"):
+        restore_stage(other, ckpt)
+    narrow = make_stage("object", window=2)
+    with pytest.raises(ValueError, match="window"):
+        restore_stage(narrow, ckpt)
+
+
+def test_sketch_mode_controller_state_survives_recovery(trace):
+    """In sketch stats mode the checkpoint must carry the CMS planes and the
+    SpaceSaving head — the replanning after a restore runs on the restored
+    sketch, so chaos == oracle still holds bit-for-bit."""
+    def sketch_stage():
+        controller = RebalanceController(
+            Assignment(ModHash(6, seed=0)),
+            BalanceConfig(theta_max=0.05, table_max=400, window=3),
+            algorithm="mixed", stats_mode="sketch")
+        return KeyedStage(WordCount(), controller, window=3,
+                          state_backend="columnar")
+    oracle = sketch_stage()
+    for keys in trace:
+        oracle.process_interval_arrays(keys)
+    stage = sketch_stage()
+    runner = ChaosRunner(stage, FaultPlan([KillTask(interval=4, site="mid"),
+                                           DropDelivery(interval=8)]),
+                         checkpoint_every=2)
+    for keys in trace:
+        runner.process_interval(keys)
+    assert len(runner.events) == 2
+    assert_reports_identical(stage.reports, oracle.reports)
+
+
+# -- per-stage coordination across a topology ---------------------------------
+
+def _two_stage_topology():
+    return Topology([
+        StageSpec("count", keyed_stage(WordCount(), 4, 0.05, table_max=300,
+                                       window=2, seed=0)),
+        StageSpec("rollup", keyed_stage(WordCount(), 3, 0.05, table_max=300,
+                                        window=2, seed=1),
+                  rekey=lambda k, v: k % 16),
+    ])
+
+
+def test_topology_checkpoint_restores_every_stage(trace):
+    topo = _two_stage_topology()
+    for keys in trace[:5]:
+        topo.process_interval(keys)
+    ckpt = topo.checkpoint()
+    assert ckpt.interval == 5 and len(ckpt.stages) == 2
+    for keys in trace[5:]:
+        topo.process_interval(keys)
+    first = [r.stage_reports for r in topo.reports]
+    first_crit = [r.critical_path for r in topo.reports]
+
+    topo.restore(ckpt)
+    assert topo._interval == 5
+    for keys in trace[5:]:
+        topo.process_interval(keys)
+    assert [r.critical_path for r in topo.reports] == first_crit
+    for got, want in zip([r.stage_reports for r in topo.reports], first):
+        for g_stage, w_stage in zip(got, want):
+            for field in REPORT_FIELDS:
+                assert getattr(g_stage, field) == getattr(w_stage, field)
+
+
+def test_topology_restore_rejects_shape_mismatch(trace):
+    topo = _two_stage_topology()
+    topo.process_interval(trace[0])
+    ckpt = topo.checkpoint()
+    single = Topology([StageSpec("count",
+                                 keyed_stage(WordCount(), 4, 0.05, window=2))])
+    with pytest.raises(ValueError, match="stages"):
+        single.restore(ckpt)
+
+
+# -- randomized fault schedules (hypothesis) ----------------------------------
+
+def test_random_fault_schedule_property():
+    """Property: ANY (interval, site, cadence, delivery-fault) combination
+    recovers losslessly on both host backends."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    short = make_trace(n_iv=6, n_tuples=300, k=300, seed=5)
+    oracles = {b: run_oracle(b, short) for b in ("object", "columnar")}
+
+    @settings(max_examples=12, deadline=None)
+    @given(backend=st.sampled_from(["object", "columnar"]),
+           kill_iv=st.integers(min_value=1, max_value=6),
+           site=st.sampled_from(["deliver", "mid"]),
+           cadence=st.integers(min_value=1, max_value=3),
+           drop_iv=st.one_of(st.none(),
+                             st.integers(min_value=1, max_value=6)))
+    def prop(backend, kill_iv, site, cadence, drop_iv):
+        faults = [KillTask(interval=kill_iv, task=0, site=site)]
+        if drop_iv is not None and drop_iv != kill_iv:
+            faults.append(DropDelivery(interval=drop_iv))
+        stage = make_stage(backend)
+        runner = ChaosRunner(stage, FaultPlan(faults),
+                             checkpoint_every=cadence)
+        for keys in short:
+            runner.process_interval(keys)
+        assert len(runner.events) == len(faults)
+        assert_reports_identical(stage.reports, oracles[backend].reports)
+        assert stage.outputs == oracles[backend].outputs
+
+    prop()
+
+
+# -- autoscaling policy loop --------------------------------------------------
+
+def _drive_autoscale(loop, gen, tuple_counts):
+    ns = []
+    for i, count in enumerate(tuple_counts):
+        gen.interval(loop.stage.controller.assignment, fluctuate=i > 0)
+        loop.step(gen.draw_tuples(count))
+        ns.append(loop.stage.n_tasks)
+    return ns
+
+
+def _assert_no_oscillation(decisions, min_gap=4):
+    """A direction reversal is legitimate when the workload really changed
+    (burst drains -> scale back in); it is thrash when it lands inside the
+    hysteresis horizon (patience + cooldown) of the opposite action."""
+    applied = [d for d in decisions if d.applied]
+    for prev, cur in zip(applied, applied[1:]):
+        if cur.reason != prev.reason:
+            assert cur.interval - prev.interval >= min_gap, (prev, cur)
+
+
+def test_autoscaler_converges_on_drift_without_oscillation():
+    """The strategy-matrix drift shape (heavy fluctuation, f=2.5): the fleet
+    grows to demand and then stays put — hysteresis + patience + the damper
+    keep the decision stream short and non-reversing."""
+    controller = RebalanceController(
+        Assignment(ModHash(2, seed=0)),
+        BalanceConfig(theta_max=0.2, table_max=400, window=2),
+        algorithm="mixed")
+    stage = KeyedStage(WordCount(), controller, window=2,
+                       state_backend="columnar")
+    gen = WorkloadGen(k=2000, z=1.1, f=2.5, seed=3, window=2)
+    loop = AutoscaleLoop(stage, AutoscaleConfig(target_load=200.0,
+                                                max_tasks=16),
+                         monitor=HeartbeatMonitor())
+    ns = _drive_autoscale(loop, gen, [900] * 25)
+    applied = [d for d in loop.decisions if d.applied]
+    assert applied, "steady overload must trigger at least one scale-out"
+    assert all(d.reason == "scale-out" for d in applied)
+    assert len(applied) <= 3
+    _assert_no_oscillation(loop.decisions)
+    # converged: the fleet stops moving once sized to demand
+    assert len(set(ns[-5:])) == 1
+    assert ns[-1] >= 4      # 900 load / 200 target, after damping
+
+
+def test_autoscaler_burst_scales_out_then_in_without_thrash():
+    """The burst shape: quiet -> hot burst -> quiet. One scale-out episode
+    during the burst, one scale-in after it drains, and no ping-pong."""
+    controller = RebalanceController(
+        Assignment(ModHash(4, seed=1)),
+        BalanceConfig(theta_max=0.2, table_max=400, window=2),
+        algorithm="mixed")
+    stage = KeyedStage(WordCount(), controller, window=2,
+                       state_backend="columnar")
+    gen = WorkloadGen(k=1000, z=1.0, f=0.5, seed=4, window=2)
+    loop = AutoscaleLoop(stage, AutoscaleConfig(target_load=200.0,
+                                                min_tasks=2, max_tasks=16))
+    counts = [300] * 4 + [1600] * 8 + [300] * 10
+    ns = _drive_autoscale(loop, gen, counts)
+    applied = [d for d in loop.decisions if d.applied]
+    assert any(d.reason == "scale-out" for d in applied)
+    assert any(d.reason == "scale-in" for d in applied)
+    _assert_no_oscillation(loop.decisions)
+    assert max(ns) >= 6                 # sized up for the burst
+    assert ns[-1] < max(ns)             # and back down after it
+    assert len(set(ns[-4:])) == 1       # quiet tail: no further motion
+
+
+def test_autoscale_damper_vetoes_unpayable_migration():
+    """With near-zero migration bandwidth the predicted stall can never pay
+    back: the decision is recorded but NOT applied, and the fleet holds."""
+    controller = RebalanceController(
+        Assignment(ModHash(2, seed=0)),
+        BalanceConfig(theta_max=0.2, table_max=400, window=2),
+        algorithm="mixed")
+    stage = KeyedStage(WordCount(), controller, window=2,
+                       state_backend="columnar", migration_bandwidth=1e-6)
+    gen = WorkloadGen(k=2000, z=1.1, f=1.0, seed=3, window=2)
+    loop = AutoscaleLoop(stage, AutoscaleConfig(target_load=200.0,
+                                                max_tasks=16))
+    _drive_autoscale(loop, gen, [900] * 8)
+    assert loop.decisions, "the watermark breach must still arm proposals"
+    assert all(not d.applied for d in loop.decisions)
+    assert all(d.predicted_stall > 0 for d in loop.decisions)
+    assert stage.n_tasks == 2
+
+
+def test_autoscale_loop_rejects_router_strategies():
+    controller = RebalanceController(
+        Assignment(ModHash(4, seed=0)),
+        BalanceConfig(theta_max=0.2, window=2), algorithm="pkg")
+    stage = KeyedStage(PartialWordCount(), controller, window=2)
+    with pytest.raises(ValueError, match="router"):
+        AutoscaleLoop(stage, AutoscaleConfig(target_load=100.0))
+
+
+def _report(interval, loads, tuples=None):
+    loads = np.asarray(loads, dtype=np.float64)
+    return types.SimpleNamespace(interval=interval, tuples=(
+        int(loads.sum()) if tuples is None else tuples),
+        task_loads=loads, makespan=float(loads.max()))
+
+
+def test_heartbeat_monitor_flags_silent_tasks():
+    mon = HeartbeatMonitor(patience=2)
+    assert mon.observe(_report(1, [5, 5, 5])) == []
+    assert mon.observe(_report(2, [5, 0, 5])) == []      # one silent interval
+    assert mon.observe(_report(3, [5, 0, 5])) == [1]     # patience reached
+    assert mon.observe(_report(4, [5, 0, 5])) == []      # flagged only once
+    assert mon.flagged == {1}
+    assert mon.observe(_report(5, [5, 4, 5])) == []      # heartbeat returns
+    assert mon.flagged == set()
+    # idle intervals carry no heartbeat signal at all
+    assert mon.observe(_report(6, [0, 0, 0], tuples=0)) == []
+    assert mon.flagged == set()
+
+
+# -- scale_to hardening (satellites) ------------------------------------------
+
+@pytest.mark.parametrize("bad", [0, -1, -7])
+def test_scale_to_rejects_empty_fleet_before_any_mutation(bad, trace):
+    stage = make_stage("object", n_tasks=4)
+    stage.process_interval_arrays(trace[0])
+    before = len(stage.stores)
+    with pytest.raises(ValueError, match="n_tasks >= 1"):
+        stage.scale_to(bad)
+    assert len(stage.stores) == before and stage.n_tasks == 4
+
+
+def test_scale_to_router_rejection_fires_before_store_growth(trace):
+    """Regression pin: the router-strategy ValueError must fire BEFORE any
+    new stores are appended — a half-grown fleet would leak stores."""
+    controller = RebalanceController(
+        Assignment(ModHash(4, seed=0)),
+        BalanceConfig(theta_max=0.2, window=2), algorithm="pkg")
+    stage = KeyedStage(PartialWordCount(), controller, window=2)
+    stage.process_interval_arrays(trace[0])
+    before = len(stage.stores)
+    with pytest.raises(ValueError):
+        stage.scale_to(8)
+    assert len(stage.stores) == before and stage.n_tasks == 4
+
+
+# -- pause/replay when traffic ends mid-pause (satellite) ---------------------
+
+@pytest.mark.parametrize("backend", ["object", "columnar", "device"])
+def test_traffic_ending_mid_pause_flushes_buffer_identically(backend):
+    """With migration_batches >= micro_batches the pause window covers the
+    whole interval, so every Delta-key tuple is still buffered when traffic
+    ends — the end-of-interval flush path must replay them, identically on
+    the reference loop and every vectorized backend."""
+    _guard(backend)
+
+    def build(vectorized, state_backend):
+        controller = RebalanceController(
+            Assignment(Hash32(5, seed=1)),
+            BalanceConfig(theta_max=0.01, table_max=300, window=3),
+            algorithm="mixed")
+        return KeyedStage(WordCount(), controller, window=3,
+                          vectorized=vectorized, state_backend=state_backend,
+                          micro_batches=4, migration_batches=4)
+
+    trace = make_trace(n_iv=6, n_tuples=400, k=300, seed=11)
+    ref = build(False, "object")
+    for keys in trace:
+        ref.process_interval_arrays(keys)
+    # the scenario only proves the flush path if tuples were actually
+    # buffered to the end of some interval
+    assert any(r.buffered > 0 for r in ref.reports)
+
+    vec = build(True, backend)
+    for keys in trace:
+        vec.process_interval_arrays(keys)
+    assert_reports_identical(vec.reports, ref.reports)
+    assert vec.outputs == ref.outputs
+    assert vec.emitted_sum == ref.emitted_sum
